@@ -1,0 +1,61 @@
+"""Fig. 13/14/15/16 reproduction: the contribution of each technique.
+
++MG  = micrograph-based training (vs model-centric baseline)
++PG  = +MG with pre-gathering
+All  = +PG with merging (merging's effect is on time steps; its byte
+       effect is neutral — Fig. 17's win is sync/launch overhead)
+
+Metrics: remote feature rows (the paper's "remote requests"), miss rate
+(Fig. 14), and modeled comm seconds.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Bench, DEFAULT_FABRIC, sample_roots, setup
+from repro.core import plan_iteration
+from repro.core.merging import merge_min_step
+
+
+def run(quick=True):
+    b = Bench("ablation")
+    for dataset in ("arxiv", "products", "uk", "in"):
+        env = setup(dataset=dataset, scale=0.02 if quick else 0.1)
+        fanout = 5 if quick else 10
+        roots = sample_roots(env, 24)
+        common = dict(num_layers=3, fanout=fanout, sample_seed=3)
+
+        def mk(strategy, pregather, assignment=None):
+            return plan_iteration(
+                env["ds"].graph, env["ds"].labels, env["part"],
+                env["owner"], env["local_idx"], env["table"].shape[1],
+                roots, strategy=strategy, pregather=pregather,
+                assignment=assignment, **common)
+
+        dgl = mk("model_centric", True)
+        mg = mk("hopgnn", False)        # micrographs, per-step fetches
+        pg = mk("hopgnn", True)         # + pre-gathering
+        merged = merge_min_step(pg.assignment)
+        al = mk("hopgnn", True, assignment=merged)   # + merging
+
+        for name, plan in (("dgl", dgl), ("+MG", mg), ("+PG", pg),
+                           ("All", al)):
+            b.emit(dataset, f"{name}_remote_rows", plan.remote_rows_exact)
+            b.emit(dataset, f"{name}_miss_rate_pct",
+                   round(100 * plan.miss_rate_per_request(), 1))
+            b.emit(dataset, f"{name}_steps", plan.num_steps)
+        b.emit(dataset, "mg_miss_improvement_pct",
+               round(100 * (dgl.miss_rate_per_request()
+                            - mg.miss_rate_per_request()), 1))
+        b.emit(dataset, "pg_request_reduction",
+               round(mg.remote_rows_exact / max(pg.remote_rows_exact, 1), 2))
+        # Fig. 13 ordering: each technique monotonically helps (bytes)
+        b.emit(dataset, "monotone",
+               int(dgl.remote_rows_exact >= mg.remote_rows_exact
+                   >= pg.remote_rows_exact))
+    b.save_csv()
+    return b.rows
+
+
+if __name__ == "__main__":
+    run()

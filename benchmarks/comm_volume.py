@@ -1,0 +1,76 @@
+"""Fig. 7 reproduction: total bytes moved per iteration — model-centric vs
+naive feature-centric — plus the HopGNN/P³/LO points (Fig. 11's mechanism).
+
+Paper finding: naive FC can be up to 2.59× *worse* than model-centric
+(intermediate data + repeated migrations); HopGNN beats both.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Bench, gnn_cfg, model_spec, sample_roots, setup
+from repro.core import plan_iteration
+from repro.core.comm_model import (hopgnn_bytes, lo_bytes,
+                                   model_centric_bytes, naive_fc_bytes,
+                                   p3_bytes)
+from repro.graph.sampler import micrograph_split, sample_tree_block
+
+
+def run(quick=True):
+    b = Bench("comm_volume")
+    worst_naive_ratio = 0.0
+    for dataset in ("arxiv", "products", "uk"):
+        # large enough that feature volume dominates model-migration bytes
+        # (the paper's regime; small graphs saturate unique-vertex counts)
+        env = setup(dataset=dataset, scale=0.15 if quick else 0.3)
+        fanout = 10
+        for model in ("gcn", "gat", "film"):
+            cfg = gnn_cfg(model, env, fanout=fanout)
+            spec = model_spec(cfg, env)
+            rng = np.random.default_rng(0)
+            roots_pm = sample_roots(env, 64, rng=rng)
+            # per-root micrographs for the byte models
+            micros, shard_of = [], []
+            for s, roots in enumerate(roots_pm):
+                blk = sample_tree_block(env["ds"].graph, roots,
+                                        cfg.num_layers, cfg.fanout, seed=11)
+                micros.extend(micrograph_split(blk))
+                shard_of.extend([s] * len(roots))
+            mc = model_centric_bytes(micros, env["owner"], shard_of, spec,
+                                     env["parts"])
+            nv = naive_fc_bytes(micros, env["owner"], spec, env["parts"])
+            p3 = p3_bytes(micros, env["owner"], shard_of, spec, env["parts"])
+            lo = lo_bytes(spec, env["parts"])
+            plan = plan_iteration(
+                env["ds"].graph, env["ds"].labels, env["part"],
+                env["owner"], env["local_idx"], env["table"].shape[1],
+                roots_pm, num_layers=cfg.num_layers, fanout=cfg.fanout,
+                strategy="hopgnn", pregather=True, sample_seed=11)
+            hop_spmd = hopgnn_bytes(plan.remote_rows_exact, plan.num_steps,
+                                    spec, env["parts"],
+                                    replicated_params=True)
+            hop_paper = hopgnn_bytes(plan.remote_rows_exact, plan.num_steps,
+                                     spec, env["parts"],
+                                     replicated_params=False)
+            case = f"{dataset}-{model}"
+            for name, d in (("model_centric", mc), ("naive_fc", nv),
+                            ("p3", p3), ("lo", lo),
+                            ("hopgnn_spmd", hop_spmd),
+                            ("hopgnn_paper", hop_paper)):
+                b.emit(case, f"{name}_MB", round(d["total"] / 1e6, 3))
+            ratio = nv["total"] / max(mc["total"], 1)
+            worst_naive_ratio = max(worst_naive_ratio, ratio)
+            b.emit(case, "naive_over_mc", round(ratio, 2))
+            b.emit(case, "hopgnn_speedup_bytes",
+                   round(mc["total"] / max(hop_paper["total"], 1), 2))
+            b.emit(case, "hopgnn_spmd_speedup_bytes",
+                   round(mc["total"] / max(hop_spmd["total"], 1), 2))
+    b.emit("summary", "naive_worst_ratio", round(worst_naive_ratio, 2))
+    # paper observes naive can exceed MC (up to 2.59×)
+    b.emit("summary", "naive_can_exceed_mc", int(worst_naive_ratio > 1.0))
+    b.save_csv()
+    return b.rows
+
+
+if __name__ == "__main__":
+    run()

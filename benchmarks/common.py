@@ -1,0 +1,102 @@
+"""Shared benchmark scaffolding.
+
+Every benchmark prints CSV rows ``benchmark,case,metric,value`` and also
+returns them; ``benchmarks.run`` aggregates all into bench_output.txt and
+benchmarks/results/*.csv. Dataset scale and iteration counts are sized for
+a 1-core CPU container (ratios, not wall-clock, are the reproduced
+quantities — see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.comm_model import FABRICS, ModelSpec
+from repro.graph import ldg_partition, make_dataset
+from repro.graph.partition import hash_partition, shard_features
+from repro.models.gnn import GNNConfig, init_gnn, model_param_bytes
+
+RESULTS = Path(__file__).resolve().parent / "results"
+
+# paper §7.1 model suite; hidden dims 16/128 evaluated in Fig. 11
+PAPER_MODELS = {
+    "gcn": dict(model="gcn", num_layers=3),
+    "sage": dict(model="sage", num_layers=3),
+    "gat": dict(model="gat", num_layers=3),
+    "deepgcn": dict(model="deepgcn", num_layers=7),
+    "film": dict(model="film", num_layers=10),
+}
+
+DEFAULT_FABRIC = FABRICS["ethernet_10g"]
+
+
+class Bench:
+    def __init__(self, name: str):
+        self.name = name
+        self.rows: list[tuple] = []
+
+    def emit(self, case: str, metric: str, value):
+        self.rows.append((self.name, case, metric, value))
+        print(f"{self.name},{case},{metric},{value}")
+
+    def save_csv(self):
+        RESULTS.mkdir(parents=True, exist_ok=True)
+        with open(RESULTS / f"{self.name}.csv", "w") as f:
+            f.write("benchmark,case,metric,value\n")
+            for r in self.rows:
+                f.write(",".join(str(x) for x in r) + "\n")
+
+
+def setup(dataset="products", scale=0.02, parts=4, partitioner="community",
+          seed=0):
+    """``community`` = METIS stand-in (ground-truth communities; see
+    repro.graph.partition.community_partition); ``ldg`` = streaming greedy;
+    ``hash`` = P³-style random."""
+    from repro.graph.partition import community_partition
+    ds = make_dataset(dataset, scale=scale, seed=seed)
+    if partitioner == "community":
+        part = community_partition(ds.communities, parts)
+    elif partitioner == "ldg":
+        part = ldg_partition(ds.graph, parts, passes=1, seed=seed)
+    else:
+        part = hash_partition(ds.num_vertices, parts, seed)
+    table, owner, local_idx = shard_features(ds.features, part, parts)
+    return dict(ds=ds, parts=parts, part=part, table=table, owner=owner,
+                local_idx=local_idx)
+
+
+def gnn_cfg(model: str, env, hidden=128, fanout=10) -> GNNConfig:
+    kw = PAPER_MODELS[model]
+    # fixed-fanout trees grow f^L: deep models (DeepGCN 7L, FiLM 10L) use
+    # fanout 2, mirroring the paper's own deep-GNN settings (§3.1)
+    if kw["num_layers"] > 3:
+        fanout = 2
+    return GNNConfig(model=kw["model"], num_layers=kw["num_layers"],
+                     hidden_dim=hidden, feature_dim=env["ds"].feature_dim,
+                     num_classes=env["ds"].num_classes, fanout=fanout)
+
+
+def model_spec(cfg: GNNConfig, env) -> ModelSpec:
+    import jax
+    params = init_gnn(jax.random.PRNGKey(0), cfg)
+    return ModelSpec(feature_dim=cfg.feature_dim, hidden_dim=cfg.hidden_dim,
+                     num_layers=cfg.num_layers,
+                     param_bytes=model_param_bytes(params))
+
+
+def timer(fn, warmup=1, iters=3) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters
+
+
+def sample_roots(env, per_model, rng=None, seed=0):
+    rng = rng or np.random.default_rng(seed)
+    tv = env["ds"].train_vertices()
+    return [rng.choice(tv, per_model, replace=False)
+            for _ in range(env["parts"])]

@@ -1,0 +1,121 @@
+"""Fig. 11/12 reproduction: end-to-end per-iteration time for DGL-style
+model-centric, P³, naive feature-centric, and HopGNN, across the GNN model
+suite.
+
+The container is 1 CPU core, so A100 wall-clock is not measurable; we
+reproduce the paper's *decomposition* instead: exact per-strategy
+communication bytes over the paper's 10 Gb/s fabric, plus a compute term
+modeled from the iteration's FLOPs at the paper's observed GPU efficiency
+(Fig. 20 shows < 20 % of one A100 kept busy by sparse GNN kernels; we use
+10 % of 312 TFLOP/s). Compute is identical across strategies (same kernels,
+same trees — the parity invariant), exactly as in the paper; the ratios are
+communication-driven, which is the paper's own bottleneck analysis (Fig. 4:
+gathering is 44–83 % of step time).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (Bench, DEFAULT_FABRIC, gnn_cfg, model_spec,
+                               sample_roots, setup)
+from repro.core import plan_iteration
+from repro.core.comm_model import (hopgnn_bytes, model_centric_bytes,
+                                   naive_fc_bytes, p3_bytes)
+from repro.graph.sampler import micrograph_split, sample_tree_block
+
+A100_EFFECTIVE = 312e12 * 0.10      # paper Fig. 20: sparse kernels <20% util
+
+
+def _iter_flops(plan, cfg) -> float:
+    """fwd+bwd ≈ 6 × Σ_hop rows_h × d_in_h × d_out_h (dense tree layout)."""
+    total = 0.0
+    d_in = cfg.feature_dim
+    rows = plan.total_rows
+    for layer in range(cfg.num_layers):
+        d_out = cfg.hidden_dim
+        total += 6.0 * rows * d_in * d_out
+        d_in = d_out
+        rows /= max(cfg.fanout, 2)
+    return total
+
+
+def run(quick=True):
+    b = Bench("end_to_end")
+    # scale matters here: on a few-thousand-vertex graph the batch saturates
+    # the vertex set and dedup hides the feature traffic the paper measures;
+    # 0.15 (~37k vertices) is the smallest products analogue in the paper's
+    # regime (features ≫ model).
+    env = setup(dataset="products", scale=0.15 if quick else 0.5)
+    per_model = 128 if quick else 512       # paper batches: 512–16k roots
+    models = ("gcn", "sage", "gat", "deepgcn", "film")
+    fabric = DEFAULT_FABRIC
+    speedups = {}
+    for model in models:
+        # deep models are the paper's Model(16) headline (Fig. 12): their α
+        # is largest there; h128 deep is also reported (scale caveat in
+        # EXPERIMENTS.md — a 37k-vertex graph caps feature volume, so the
+        # migration share is pessimistic vs the paper's 2.45M vertices).
+        hiddens = (16, 128) if (quick and model in ("deepgcn", "film")) \
+            else ((128,) if quick else (16, 128))
+        for hidden in hiddens:
+            cfg = gnn_cfg(model, env, hidden=hidden, fanout=10)
+            spec = model_spec(cfg, env)
+            rng = np.random.default_rng(0)
+            roots_pm = sample_roots(env, per_model, rng=rng)
+
+            micros, shard_of = [], []
+            for s, roots in enumerate(roots_pm):
+                blk = sample_tree_block(env["ds"].graph, roots,
+                                        cfg.num_layers, cfg.fanout, seed=5)
+                micros.extend(micrograph_split(blk))
+                shard_of.extend([s] * len(roots))
+
+            plan_hop = plan_iteration(
+                env["ds"].graph, env["ds"].labels, env["part"],
+                env["owner"], env["local_idx"], env["table"].shape[1],
+                roots_pm, num_layers=cfg.num_layers, fanout=cfg.fanout,
+                strategy="hopgnn", pregather=True, sample_seed=5)
+
+            compute_s = _iter_flops(plan_hop, cfg) / A100_EFFECTIVE \
+                / env["parts"]
+
+            mc = model_centric_bytes(micros, env["owner"], shard_of, spec,
+                                     env["parts"])
+            nv = naive_fc_bytes(micros, env["owner"], spec, env["parts"])
+            p3 = p3_bytes(micros, env["owner"], shard_of, spec,
+                          env["parts"])
+            hop = hopgnn_bytes(plan_hop.remote_rows_exact,
+                               plan_hop.num_steps, spec, env["parts"],
+                               replicated_params=False)
+
+            case = f"products-{model}-h{hidden}"
+            times = {}
+            for name, d, msgs in (("dgl", mc, 4), ("p3", p3, 8),
+                                  ("naive", nv, nv.get("migrations", 4)),
+                                  ("hopgnn", hop,
+                                   2 * plan_hop.num_steps)):
+                comm_s = fabric.seconds(d["total"] / env["parts"],
+                                        messages=msgs)
+                times[name] = comm_s + compute_s
+                b.emit(case, f"{name}_iter_ms",
+                       round(1000 * times[name], 3))
+                b.emit(case, f"{name}_comm_ms", round(1000 * comm_s, 3))
+            b.emit(case, "compute_ms", round(1000 * compute_s, 3))
+            b.emit(case, "comm_share_dgl_pct",
+                   round(100 * (times["dgl"] - compute_s) / times["dgl"], 1))
+            sp = {k: times[k] / times["hopgnn"] for k in times}
+            speedups[(model, hidden)] = sp
+            for k in ("dgl", "p3", "naive"):
+                b.emit(case, f"speedup_vs_{k}", round(sp[k], 2))
+    best_p3 = max(v["p3"] for v in speedups.values())
+    b.emit("summary", "best_speedup_vs_p3", round(best_p3, 2))
+    b.emit("summary", "hopgnn_beats_dgl_everywhere",
+           int(all(v["dgl"] > 1 for v in speedups.values())))
+    b.emit("summary", "hopgnn_beats_naive_everywhere",
+           int(all(v["naive"] > 1 for v in speedups.values())))
+    b.save_csv()
+    return b.rows
+
+
+if __name__ == "__main__":
+    run()

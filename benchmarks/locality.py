@@ -1,0 +1,74 @@
+"""Table 1 reproduction: micrograph locality R_micro vs subgraph locality
+R_sub across partitioners (METIS-like LDG vs range heuristic), sampling
+families (node-wise vs layer-wise), shard counts (2–16), and model depths
+(2L vs 10L).
+
+Paper finding: R_micro > R_sub always; the gap widens with shard count
+(1.59× at 2 shards → 10.6× at 16).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Bench
+from repro.graph import ldg_partition, make_dataset, range_partition
+from repro.graph.sampler import (layerwise_sample, micrograph_split,
+                                 sample_tree_block)
+
+
+def _r_micro_r_sub(ds, part, layers, fanout, n_roots=48, seed=0):
+    rng = np.random.default_rng(seed)
+    roots = rng.choice(ds.num_vertices, n_roots, replace=False)
+    blk = sample_tree_block(ds.graph, roots, layers, fanout, seed=seed)
+    micros = micrograph_split(blk)
+    r_micro = float(np.mean([m.locality(part) for m in micros]))
+    # R_sub: non-root vertices co-located with a designated root (paper §4)
+    non_root = np.concatenate(blk.hops[1:])
+    r_sub = float(np.mean(part[non_root] == part[roots[0]]))
+    return r_micro, r_sub
+
+
+def _r_layerwise(ds, part, layers, layer_size, n_roots=48, seed=0):
+    rng = np.random.default_rng(seed)
+    roots = rng.choice(ds.num_vertices, n_roots, replace=False)
+    r_micros = []
+    for r in roots[:16]:
+        lyrs = layerwise_sample(ds.graph, np.array([r]), layers, layer_size,
+                                np.random.default_rng(seed))
+        non_root = np.concatenate(lyrs[1:]) if len(lyrs) > 1 else np.array([])
+        if non_root.size:
+            r_micros.append(float(np.mean(part[non_root] == part[r])))
+    return float(np.mean(r_micros)) if r_micros else 1.0
+
+
+def run(quick=True):
+    b = Bench("locality")
+    for dataset, part_name in (("arxiv", "ldg"), ("products", "ldg"),
+                               ("uk", "range"), ("it", "range")):
+        scale = 0.02 if quick else 0.1
+        if dataset == "it":
+            scale = 0.01 if quick else 0.05
+        ds = make_dataset(dataset, scale=scale, seed=0)
+        for shards in (2, 4, 8, 16):
+            part = (ldg_partition(ds.graph, shards, passes=1)
+                    if part_name == "ldg"
+                    else range_partition(ds.num_vertices, shards))
+            for layers, tag in ((2, "2L"), (10, "10L")):
+                fanout = 2 if layers == 10 else 5
+                r_micro, r_sub = _r_micro_r_sub(ds, part, layers, fanout)
+                case = f"{dataset}-{part_name}-S{shards}-{tag}"
+                b.emit(case, "r_micro_pct", round(100 * r_micro, 1))
+                b.emit(case, "r_sub_pct", round(100 * r_sub, 1))
+                b.emit(case, "micro_gt_sub", int(r_micro > r_sub))
+        # layer-wise sampling family (Table 1 lower half), 4 shards
+        part = (ldg_partition(ds.graph, 4, passes=1) if part_name == "ldg"
+                else range_partition(ds.num_vertices, 4))
+        rl = _r_layerwise(ds, part, 2, layer_size=32)
+        b.emit(f"{dataset}-{part_name}-S4-layerwise2L", "r_micro_pct",
+               round(100 * rl, 1))
+    b.save_csv()
+    return b.rows
+
+
+if __name__ == "__main__":
+    run()

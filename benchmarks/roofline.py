@@ -1,0 +1,135 @@
+"""§Roofline (deliverable g): three-term roofline per (arch × shape × mesh)
+from the compiled dry-run artifacts.
+
+  compute    = HLO_FLOPs / (chips × peak)        peak = 197 TFLOP/s bf16
+  memory     = HLO_bytes / (chips × HBM_bw)      HBM  = 819 GB/s
+  collective = coll_bytes / (chips × link_bw)    ICI  = 50 GB/s/link
+
+HLO numbers come from ``cost_analysis`` with the scan-trip-count
+extrapolation done by the dry-run (see launch/dryrun.py); collective bytes
+are the HLO census. cost_analysis on the partitioned module is already
+per-device, so `chips` appears only in MODEL_FLOPS normalization.
+
+MODEL_FLOPS = 6·N·D (dense; N_active for MoE) for train (×1/3 for pure
+forward shapes: 2·N·D), giving the useful-compute ratio that flags
+remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+DRYRUN = Path(__file__).resolve().parent / "results" / "dryrun"
+
+
+def shape_tokens(shape: str, arch_rec: dict) -> int:
+    from repro.configs import SHAPES
+    sh = SHAPES[shape]
+    if sh.kind == "decode":
+        return sh.global_batch          # one token per sequence
+    return sh.global_batch * sh.seq_len
+
+
+def analyze(rec: dict) -> dict:
+    chips = 512 if rec["mesh"] == "2x16x16" else 256
+    compute_s = rec["flops"] / PEAK_FLOPS            # per-chip flops already
+    memory_s = rec["bytes_accessed"] / HBM_BW
+    coll_s = rec["collective_bytes_total"] / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": coll_s}
+    dominant = max(terms, key=terms.get)
+
+    n = rec["active_params"]
+    tokens = shape_tokens(rec["shape"], rec)
+    factor = 6.0 if rec["shape"].startswith("train") else 2.0
+    model_flops_per_chip = factor * n * tokens / chips
+    useful = model_flops_per_chip / max(rec["flops"], 1.0)
+
+    bound_s = max(terms.values())
+    # roofline fraction: useful work / what the dominant term costs
+    mfu_bound = (model_flops_per_chip / PEAK_FLOPS) / max(bound_s, 1e-12)
+    return {**terms, "dominant": dominant.replace("_s", ""),
+            "model_flops_per_chip": model_flops_per_chip,
+            "useful_ratio": useful, "roofline_fraction": mfu_bound,
+            "step_time_bound_s": bound_s}
+
+
+def load_records(mesh: str = "16x16", tag: str = ""):
+    recs = []
+    for p in sorted(DRYRUN.glob("*.json")):
+        r = json.loads(p.read_text())
+        want_tag = tag == r.get("tag", "")
+        parts = p.stem.split(".")
+        has_tag = len(parts) > 3 or (len(parts) == 4)
+        if r.get("mesh") != mesh or not want_tag:
+            continue
+        recs.append(r)
+    return recs
+
+
+def table(mesh: str = "16x16") -> str:
+    rows = []
+    hdr = (f"| arch | shape | status | compute(s) | memory(s) | "
+           f"collective(s) | dominant | useful | roofline-frac |")
+    sep = "|" + "---|" * 9
+    rows.append(hdr)
+    rows.append(sep)
+    for r in load_records(mesh):
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | skipped | - | - | "
+                        f"- | - | - | - |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | FAILED | | | | | | |")
+            continue
+        a = analyze(r)
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | ok | {a['compute_s']:.4g} | "
+            f"{a['memory_s']:.4g} | {a['collective_s']:.4g} | "
+            f"{a['dominant']} | {a['useful_ratio']:.2f} | "
+            f"{a['roofline_fraction']:.3f} |")
+    return "\n".join(rows)
+
+
+def run(quick=True):
+    from benchmarks.common import Bench
+    b = Bench("roofline")
+    n_ok = n_skip = 0
+    worst = []
+    for r in load_records("16x16"):
+        if r["status"] == "skipped":
+            n_skip += 1
+            continue
+        if r["status"] != "ok":
+            b.emit(f"{r['arch']}-{r['shape']}", "status", "FAILED")
+            continue
+        n_ok += 1
+        a = analyze(r)
+        case = f"{r['arch']}-{r['shape']}"
+        b.emit(case, "dominant", a["dominant"])
+        b.emit(case, "compute_s", f"{a['compute_s']:.5g}")
+        b.emit(case, "memory_s", f"{a['memory_s']:.5g}")
+        b.emit(case, "collective_s", f"{a['collective_s']:.5g}")
+        b.emit(case, "useful_ratio", f"{a['useful_ratio']:.3f}")
+        b.emit(case, "roofline_fraction", f"{a['roofline_fraction']:.4f}")
+        worst.append((a["roofline_fraction"], case))
+    b.emit("summary", "combos_ok", n_ok)
+    b.emit("summary", "combos_skipped", n_skip)
+    if worst:
+        worst.sort()
+        b.emit("summary", "worst_roofline", f"{worst[0][1]}"
+               f"={worst[0][0]:.4f}")
+    b.save_csv()
+    return b.rows
+
+
+if __name__ == "__main__":
+    import sys
+    if len(sys.argv) > 1 and sys.argv[1] == "--table":
+        print(table(sys.argv[2] if len(sys.argv) > 2 else "16x16"))
+    else:
+        run()

@@ -1,0 +1,93 @@
+"""Communication-strategy analysis (the paper's Figs 5/7 as a tool).
+
+Given a dataset/partition/model, print a per-strategy communication
+breakdown and the α ratio, over both the paper's 10 GbE fabric and TPU ICI.
+
+    PYTHONPATH=src python examples/comm_analysis.py --dataset uk --model gat
+"""
+import argparse
+
+import numpy as np
+
+from repro.core import plan_iteration
+from repro.core.comm_model import (FABRICS, ModelSpec, alpha_ratio,
+                                   hopgnn_bytes, lo_bytes,
+                                   model_centric_bytes, naive_fc_bytes,
+                                   p3_bytes)
+from repro.graph import make_dataset
+from repro.graph.partition import community_partition, shard_features
+from repro.graph.sampler import micrograph_split, sample_tree_block
+from repro.models.gnn import GNNConfig, init_gnn, model_param_bytes
+import jax
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="products")
+    ap.add_argument("--model", default="sage")
+    ap.add_argument("--scale", type=float, default=0.1)
+    ap.add_argument("--shards", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=128)
+    ap.add_argument("--fanout", type=int, default=10)
+    ap.add_argument("--layers", type=int, default=3)
+    args = ap.parse_args()
+
+    ds = make_dataset(args.dataset, scale=args.scale, seed=0)
+    part = community_partition(ds.communities, args.shards)
+    table, owner, local_idx = shard_features(ds.features, part, args.shards)
+    cfg = GNNConfig(model=args.model, num_layers=args.layers,
+                    hidden_dim=128, feature_dim=ds.feature_dim,
+                    num_classes=ds.num_classes, fanout=args.fanout)
+    params = init_gnn(jax.random.PRNGKey(0), cfg)
+    spec = ModelSpec(feature_dim=cfg.feature_dim, hidden_dim=cfg.hidden_dim,
+                     num_layers=cfg.num_layers,
+                     param_bytes=model_param_bytes(params))
+
+    rng = np.random.default_rng(0)
+    tv = ds.train_vertices()
+    roots = [rng.choice(tv, args.batch // args.shards, replace=False)
+             for _ in range(args.shards)]
+    micros, shard_of = [], []
+    for s, r in enumerate(roots):
+        blk = sample_tree_block(ds.graph, r, args.layers, args.fanout,
+                                seed=7)
+        micros.extend(micrograph_split(blk))
+        shard_of.extend([s] * len(r))
+
+    plan = plan_iteration(ds.graph, ds.labels, part, owner, local_idx,
+                          table.shape[1], roots, num_layers=args.layers,
+                          fanout=args.fanout, strategy="hopgnn",
+                          pregather=True, sample_seed=7)
+
+    rows = {
+        "model-centric (DGL)": model_centric_bytes(
+            micros, owner, shard_of, spec, args.shards),
+        "naive feature-centric": naive_fc_bytes(
+            micros, owner, spec, args.shards),
+        "P3": p3_bytes(micros, owner, shard_of, spec, args.shards),
+        "LO (biased)": lo_bytes(spec, args.shards),
+        "HopGNN (paper)": hopgnn_bytes(
+            plan.remote_rows_exact, plan.num_steps, spec, args.shards,
+            replicated_params=False),
+        "HopGNN (SPMD)": hopgnn_bytes(
+            plan.remote_rows_exact, plan.num_steps, spec, args.shards,
+            replicated_params=True),
+    }
+    a = alpha_ratio(rows["model-centric (DGL)"]["remote_rows"],
+                    spec.feature_dim, spec.param_bytes)
+    print(f"{args.dataset} × {args.model}: α = {a:.1f} "
+          f"(model {spec.param_bytes / 1e6:.2f} MB)")
+    print(f"{'strategy':24s} {'total MB':>10s} {'feat':>8s} {'model':>8s} "
+          f"{'interm':>8s} {'10GbE ms':>9s} {'ICI ms':>8s}")
+    for name, d in rows.items():
+        t1 = FABRICS["ethernet_10g"].seconds(d["total"] / args.shards)
+        t2 = FABRICS["tpu_ici"].seconds(d["total"] / args.shards)
+        print(f"{name:24s} {d['total'] / 1e6:10.2f} "
+              f"{d['feature_bytes'] / 1e6:8.2f} "
+              f"{d['model_bytes'] / 1e6:8.2f} "
+              f"{d['intermediate_bytes'] / 1e6:8.2f} "
+              f"{1e3 * t1:9.2f} {1e3 * t2:8.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Batched LLM serving example over the assigned-architecture stack.
+
+Prefill a batch of prompts through any ``--arch`` (reduced smoke variant on
+CPU), then decode autoregressively with the per-family cache (KV ring
+buffer / RWKV state / RG-LRU state).
+
+    PYTHONPATH=src python examples/serve_llm.py --arch rwkv6-7b --gen 12
+    PYTHONPATH=src python examples/serve_llm.py --arch h2o-danube-3-4b
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config, smoke_variant
+from repro.data import make_batch
+from repro.launch.serve import generate
+from repro.models.transformer import init_params
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b", choices=ARCH_IDS)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--sample", action="store_true")
+    args = ap.parse_args()
+
+    cfg = smoke_variant(get_config(args.arch))
+    print(f"arch {cfg.name} ({cfg.family}): {cfg.num_layers}L "
+          f"d={cfg.d_model} vocab={cfg.vocab_size}")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg, args.batch, args.prompt_len, seed=0)
+
+    t0 = time.perf_counter()
+    out = generate(params, cfg, batch, args.gen,
+                   max_seq=args.prompt_len + args.gen + 8,
+                   greedy=not args.sample)
+    dt = time.perf_counter() - t0
+    toks = np.asarray(out)
+    print(f"generated {toks.shape[0]}×{toks.shape[1]} tokens in {dt:.2f}s "
+          f"({toks.size / dt:.1f} tok/s on CPU)")
+    for i, row in enumerate(toks):
+        print(f"  request {i}: {row[:16].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Iteration-level checkpointing (paper §8 'Failure recovery')."""
+from repro.checkpoint.store import save_checkpoint, load_checkpoint, latest_step
+
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]

@@ -1,0 +1,107 @@
+"""Iteration-level checkpointing (paper §8).
+
+HopGNN's models visit several servers per iteration; the paper's insight is
+that checkpointing at *iteration* boundaries (after gradients are applied
+and partial-gradient state is cleared) needs only (iteration id, model
+parameters) — no in-flight time-step state. We implement exactly that:
+an ``npz`` of flattened pytree leaves plus a JSON manifest, atomic rename,
+and a ``latest`` pointer. Works for both the GNN side and the LLM stack
+(any pytree of arrays).
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+# npz cannot store ml_dtypes dtypes; view them as same-width ints.
+_EXOTIC = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+           "float8_e5m2": np.uint8}
+
+
+def _encode(arr: np.ndarray) -> tuple[np.ndarray, str]:
+    name = str(arr.dtype)
+    if name in _EXOTIC:
+        return arr.view(_EXOTIC[name]), name
+    return arr, name
+
+
+def _decode(arr: np.ndarray, name: str) -> np.ndarray:
+    if name in _EXOTIC:
+        import ml_dtypes
+        return arr.view(getattr(ml_dtypes, name))
+    return arr
+
+
+def save_checkpoint(directory: str | Path, step: int, tree: Any,
+                    extra: Optional[dict] = None, keep: int = 3) -> Path:
+    """Atomically write ``step-<step>.npz`` + manifest; prune old ones."""
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    arrays, dtypes = {}, []
+    for i, x in enumerate(leaves):
+        enc, name = _encode(np.asarray(x))
+        arrays[f"leaf_{i}"] = enc
+        dtypes.append(name)
+    manifest = {"step": int(step), "num_leaves": len(leaves),
+                "dtypes": dtypes, "treedef": str(treedef),
+                "extra": extra or {}}
+
+    final = directory / f"step-{step:08d}.npz"
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp.npz")
+    os.close(fd)
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **arrays)
+        os.replace(tmp, final)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    (directory / f"step-{step:08d}.json").write_text(json.dumps(manifest))
+    (directory / "latest").write_text(str(step))
+
+    for old in sorted(directory.glob("step-*.npz"))[:-keep]:
+        old.unlink(missing_ok=True)
+        old.with_suffix(".json").unlink(missing_ok=True)
+    return final
+
+
+def latest_step(directory: str | Path) -> Optional[int]:
+    p = Path(directory) / "latest"
+    if not p.exists():
+        return None
+    return int(p.read_text().strip())
+
+
+def load_checkpoint(directory: str | Path, tree_like: Any,
+                    step: Optional[int] = None) -> tuple[Any, int, dict]:
+    """Restore into the structure of ``tree_like`` (shape/dtype template).
+    Returns (tree, step, extra)."""
+    directory = Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {directory}")
+    data = np.load(directory / f"step-{step:08d}.npz")
+    manifest = json.loads((directory / f"step-{step:08d}.json").read_text())
+    leaves, treedef = _flatten(tree_like)
+    if len(leaves) != manifest["num_leaves"]:
+        raise ValueError(
+            f"leaf count mismatch: template {len(leaves)} vs "
+            f"checkpoint {manifest['num_leaves']}")
+    restored = [_decode(data[f"leaf_{i}"], manifest["dtypes"][i])
+                for i in range(len(leaves))]
+    tree = jax.tree.unflatten(treedef, restored)
+    return tree, step, manifest["extra"]

@@ -1,0 +1,137 @@
+"""Architecture + input-shape registry.
+
+``get_config(arch_id)`` returns the exact published configuration;
+``smoke_variant(cfg)`` returns the reduced same-family variant used by the
+CPU smoke tests (≤2 layers, d_model ≤ 512, ≤4 experts — per the brief);
+``input_specs(cfg, shape)`` returns weak-type-correct ShapeDtypeStruct
+stand-ins for every model input of a given input shape (no allocation —
+the dry-run pattern).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer.config import ArchConfig
+
+_MODULES = {
+    "h2o-danube-3-4b": "h2o_danube_3_4b",
+    "pixtral-12b": "pixtral_12b",
+    "nemotron-4-340b": "nemotron_4_340b",
+    "qwen2.5-3b": "qwen2_5_3b",
+    "whisper-base": "whisper_base",
+    "qwen2-1.5b": "qwen2_1_5b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "rwkv6-7b": "rwkv6_7b",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; have {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return mod.CONFIG
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ArchConfig, shape_name: str) -> tuple[bool, str]:
+    """(runs?, reason). long_500k requires sub-quadratic decode state."""
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("full attention: a 524288-token KV cache is O(S) "
+                       "per token with O(S) HBM — skipped per DESIGN.md §4")
+    return True, ""
+
+
+def smoke_variant(cfg: ArchConfig) -> ArchConfig:
+    """Reduced same-family variant: ≤2 layers (one pattern period for
+    hybrids), d_model ≤ 512, ≤4 experts, small vocab."""
+    kw = dict(
+        name=cfg.name + "-smoke",
+        num_layers=min(cfg.num_layers, 2),
+        d_model=min(cfg.d_model, 256),
+        d_ff=min(cfg.d_ff, 512),
+        vocab_size=min(cfg.vocab_size, 512),
+        vocab_pad_to=128,
+        dtype="float32",
+    )
+    if cfg.num_heads:
+        heads = min(cfg.num_heads, 4)
+        kw["num_heads"] = heads
+        kw["num_kv_heads"] = max(1, min(cfg.num_kv_heads,
+                                        heads if cfg.num_kv_heads >= cfg.num_heads
+                                        else max(1, heads // 2)))
+        kw["head_dim"] = kw["d_model"] // heads
+    if cfg.swa_window:
+        kw["swa_window"] = 64
+    if cfg.moe_num_experts:
+        kw["moe_num_experts"] = 4
+        kw["moe_top_k"] = min(cfg.moe_top_k, 2)
+        kw["moe_num_shared"] = min(cfg.moe_num_shared, 1)
+        kw["moe_expert_d_ff"] = 128
+    if cfg.family == "hybrid":
+        kw["num_layers"] = len(tuple(cfg.block_pattern))   # one full period
+        kw["rglru_width"] = kw["d_model"]
+        kw["local_attn_window"] = 32
+    if cfg.family == "ssm":
+        kw["rwkv_head_dim"] = 32
+    if cfg.family == "audio":
+        kw["encoder_layers"] = 2
+        kw["encoder_seq"] = 64
+        kw["encoder_d_model"] = kw["d_model"]
+    if cfg.family == "vlm":
+        kw["num_patches"] = 16
+        kw["patch_dim"] = 64
+    return dataclasses.replace(cfg, **kw)
+
+
+def input_specs(cfg: ArchConfig, shape_name: str,
+                seq: Optional[int] = None,
+                batch: Optional[int] = None) -> dict:
+    """ShapeDtypeStruct stand-ins for the *data* inputs of a step.
+
+    train/prefill → the forward batch dict; decode → {"token": (B,)}
+    (the decode *state* specs come from ``jax.eval_shape`` over
+    ``init_decode_state`` in the dry-run driver).
+    """
+    sh = SHAPES[shape_name]
+    S = seq if seq is not None else sh.seq_len
+    B = batch if batch is not None else sh.global_batch
+    i32 = jnp.int32
+    act = cfg.activation_dtype
+    if sh.kind == "decode":
+        return {"token": jax.ShapeDtypeStruct((B,), i32)}
+    specs: dict = {}
+    if cfg.family == "vlm":
+        P = min(cfg.num_patches, max(S // 4, 1))
+        specs["patches"] = jax.ShapeDtypeStruct((B, P, cfg.patch_dim), act)
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S - P), i32)
+    elif cfg.family == "audio":
+        De = cfg.encoder_d_model or cfg.d_model
+        specs["frames"] = jax.ShapeDtypeStruct((B, cfg.encoder_seq, De), act)
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+    return specs

@@ -1,0 +1,30 @@
+"""HopGNN core — the paper's contribution.
+
+Feature-centric distributed GNN training: instead of fetching remote vertex
+features to stationary data-parallel model replicas (model-centric, DGL
+style), HopGNN redistributes each mini-batch's root vertices to the servers
+that own their features ("home" servers), trains per-root *micrographs*
+there over N rotating time steps (model migration — free under SPMD
+replication, see DESIGN.md §2), pre-gathers the deduplicated remote feature
+set once per iteration, and adaptively merges time steps.
+
+Public API:
+  - plan_iteration(...)        host-side planner → IterationPlan
+  - run_iteration(...)         device engine (shard_map or emulated comm)
+  - MergingController          §5.3 adaptive time-step merging
+  - comm_model.*               byte accounting for every strategy
+"""
+from repro.core.strategies import plan_iteration, IterationPlan, Strategy
+from repro.core.distributed import (
+    run_iteration, make_sharded_iteration, EmulatedComm, ShardComm,
+)
+from repro.core.merging import MergingController
+from repro.core.p3 import P3Plan, P3Unsupported, plan_p3, run_p3_iteration
+from repro.core import comm_model
+
+__all__ = [
+    "plan_iteration", "IterationPlan", "Strategy", "run_iteration",
+    "make_sharded_iteration", "EmulatedComm", "ShardComm",
+    "MergingController", "comm_model",
+    "P3Plan", "P3Unsupported", "plan_p3", "run_p3_iteration",
+]

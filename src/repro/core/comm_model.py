@@ -1,0 +1,215 @@
+"""Communication-volume accounting for every training strategy (Fig. 5, 7).
+
+The paper's figures compare *bytes moved per iteration* across strategies;
+byte counts are hardware-independent, so this module is pure host-side
+arithmetic over sampled tree blocks. A ``Fabric`` turns bytes into modeled
+seconds for a named interconnect (the paper's 10 Gb/s Ethernet, or TPU ICI)
+so EXPERIMENTS.md can report both.
+
+Strategies accounted:
+
+* ``model_centric``  — DGL: each shard fetches the deduplicated remote
+  feature rows of its whole subgraph; gradients all-reduce once.
+* ``naive_fc``       — §3.2: the model migrates layer-by-layer to wherever
+  the current layer's features live, carrying parameters + partial
+  activations + the subgraph topology on every hop. Reproduces the paper's
+  "up to 2.59× worse than model-centric" finding (Fig. 7).
+* ``hopgnn``         — §5: remote rows after micrograph redistribution and
+  pre-gather dedup, plus one model+gradient migration per time step
+  (``replicated_params=True`` zeroes the migration term — the SPMD
+  realization where parameters are already everywhere; see DESIGN.md §2).
+* ``p3``             — P³ [OSDI'21]: feature dimension is model-parallel for
+  the input layer; hidden activations (and their gradients) of the
+  second-innermost hop are exchanged instead of raw features. Cheap for
+  small hidden dims, poor for large ones — the sensitivity the paper
+  exploits in §7.2 observation 4.
+* ``lo``             — locality-optimized: zero remote feature bytes (and
+  biased batches; accuracy cost measured in benchmarks/accuracy.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.graph.sampler import TreeBlock
+
+F32 = 4  # feature/activation/parameter byte width used throughout the paper
+
+
+@dataclasses.dataclass(frozen=True)
+class Fabric:
+    """Point-to-point fabric model: seconds = bytes / bandwidth (+latency/msg)."""
+
+    name: str
+    bandwidth_Bps: float
+    latency_s: float = 0.0
+
+    def seconds(self, total_bytes: float, messages: int = 0) -> float:
+        return total_bytes / self.bandwidth_Bps + messages * self.latency_s
+
+
+FABRICS = {
+    # the paper's cluster interconnect
+    "ethernet_10g": Fabric("ethernet_10g", 10e9 / 8, latency_s=50e-6),
+    # TPU v5e ICI per link (roofline constant from the brief)
+    "tpu_ici": Fabric("tpu_ici", 50e9, latency_s=1e-6),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """What the comm model needs to know about the GNN being trained."""
+
+    feature_dim: int
+    hidden_dim: int
+    num_layers: int
+    param_bytes: int
+
+    def layer_width(self, hop: int) -> int:
+        """Embedding width at hop h *after* (num_layers - h) layers ran."""
+        return self.feature_dim if hop == self.num_layers else self.hidden_dim
+
+
+# ---------------------------------------------------------------------------
+# Per-strategy byte accounting
+# ---------------------------------------------------------------------------
+
+def _remote_unique_rows(blocks: Sequence[TreeBlock], owner: np.ndarray,
+                        shard_of_block: Sequence[int],
+                        dedup_across_blocks: bool) -> int:
+    """Unique remote feature rows fetched, grouped by the fetching shard."""
+    per_shard: dict[int, list[np.ndarray]] = {}
+    for blk, s in zip(blocks, shard_of_block):
+        per_shard.setdefault(s, []).append(blk.all_ids())
+    total = 0
+    for s, ids_list in per_shard.items():
+        if dedup_across_blocks:
+            ids = np.unique(np.concatenate(ids_list))
+            total += int((owner[ids] != s).sum())
+        else:
+            for ids in ids_list:
+                u = np.unique(ids)
+                total += int((owner[u] != s).sum())
+    return total
+
+
+def model_centric_bytes(blocks: Sequence[TreeBlock], owner: np.ndarray,
+                        shard_of_block: Sequence[int], spec: ModelSpec,
+                        num_shards: int) -> dict:
+    """DGL: remote features in, one gradient all-reduce out."""
+    rows = _remote_unique_rows(blocks, owner, shard_of_block,
+                               dedup_across_blocks=True)
+    feat = rows * spec.feature_dim * F32
+    # ring all-reduce moves 2·(N-1)/N · param_bytes per shard
+    grad = int(2 * (num_shards - 1) / num_shards * spec.param_bytes) * num_shards
+    return {"feature_bytes": feat, "grad_bytes": grad, "model_bytes": 0,
+            "intermediate_bytes": 0, "total": feat + grad,
+            "remote_rows": rows}
+
+
+def topology_bytes(blk: TreeBlock) -> int:
+    return int(sum(h.size for h in blk.hops)) * F32
+
+
+def naive_fc_bytes(blocks: Sequence[TreeBlock], owner: np.ndarray,
+                   spec: ModelSpec, num_shards: int) -> dict:
+    """§3.2: per subgraph, walk layers innermost-out; for each layer visit
+    every shard owning any of that layer's features, carrying model +
+    partial state + topology on every migration.
+
+    Partial state at layer ℓ (hops 0..ℓ-1 still incomplete) = the
+    aggregation workspace for those hops: Σ_{h<ℓ} |hop_h| · width(h) · 4B.
+    """
+    k = spec.num_layers
+    model = intermediate = 0
+    migrations = 0
+    for blk in blocks:
+        topo = topology_bytes(blk)
+        here = int(owner[blk.hops[0][0]])  # model starts at root's home
+        for layer in range(k, 0, -1):      # consume hop `layer` features
+            owners = np.unique(owner[blk.hops[layer]])
+            carried = sum(blk.hops[h].size * spec.layer_width(h) * F32
+                          for h in range(layer))
+            for dst in owners:
+                if int(dst) == here:
+                    continue
+                migrations += 1
+                model += spec.param_bytes + topo
+                intermediate += carried
+                here = int(dst)
+        # return home for the final root update + sync
+        if here != int(owner[blk.hops[0][0]]):
+            migrations += 1
+            model += spec.param_bytes + topo
+            intermediate += blk.hops[0].size * spec.layer_width(0) * F32
+    grad = int(2 * (num_shards - 1) / num_shards * spec.param_bytes) * num_shards
+    total = model + intermediate + grad
+    return {"feature_bytes": 0, "grad_bytes": grad, "model_bytes": model,
+            "intermediate_bytes": intermediate, "total": total,
+            "migrations": migrations}
+
+
+def hopgnn_bytes(remote_rows_pregathered: int, num_steps: int,
+                 spec: ModelSpec, num_shards: int,
+                 replicated_params: bool = False) -> dict:
+    """§5: deduped remote rows (from the IterationPlan's exact accounting) +
+    per-step model migration. With ``replicated_params`` (the SPMD
+    realization) migration bytes are zero; paper-faithful mode charges
+    parameters + accumulated gradients per hop of the rotation."""
+    feat = remote_rows_pregathered * spec.feature_dim * F32
+    if replicated_params:
+        model = 0
+    else:
+        # every model makes (num_steps - 1) hops carrying params + grads
+        model = num_shards * (num_steps - 1) * 2 * spec.param_bytes
+    grad = int(2 * (num_shards - 1) / num_shards * spec.param_bytes) * num_shards
+    return {"feature_bytes": feat, "grad_bytes": grad, "model_bytes": model,
+            "intermediate_bytes": 0, "total": feat + model + grad,
+            "remote_rows": remote_rows_pregathered}
+
+
+def p3_bytes(blocks: Sequence[TreeBlock], owner: np.ndarray,
+             shard_of_block: Sequence[int], spec: ModelSpec,
+             num_shards: int) -> dict:
+    """P³: input-layer model parallelism over the feature dimension.
+
+    Raw features never move (each shard holds a 1/N slice of *every*
+    vertex). The innermost layer computes partial activations everywhere;
+    the (N-1)/N remote share of hop-(k-1) hidden activations is exchanged
+    (pull), and the matching gradients flow back (push) — 2× hidden bytes.
+    Remaining layers run data-parallel on hop<k-1 vertices whose *hidden*
+    embeddings are fetched like features (hidden_dim wide, not feature_dim).
+    """
+    k = spec.num_layers
+    frac_remote = (num_shards - 1) / num_shards
+    act = 0
+    for blk, s in zip(blocks, shard_of_block):
+        hk1 = np.unique(blk.hops[k - 1]) if k >= 1 else np.array([], np.int64)
+        act += int(2 * hk1.size * spec.hidden_dim * F32 * frac_remote)
+        # hops 0..k-2 hidden embeddings fetched when remote
+        for h in range(0, k - 1):
+            u = np.unique(blk.hops[h])
+            act += int((owner[u] != s).sum()) * spec.hidden_dim * F32
+    grad = int(2 * (num_shards - 1) / num_shards * spec.param_bytes) * num_shards
+    return {"feature_bytes": 0, "grad_bytes": grad, "model_bytes": 0,
+            "intermediate_bytes": act, "total": act + grad}
+
+
+def lo_bytes(spec: ModelSpec, num_shards: int) -> dict:
+    grad = int(2 * (num_shards - 1) / num_shards * spec.param_bytes) * num_shards
+    return {"feature_bytes": 0, "grad_bytes": grad, "model_bytes": 0,
+            "intermediate_bytes": 0, "total": grad}
+
+
+# ---------------------------------------------------------------------------
+# The α ratio (Fig. 5)
+# ---------------------------------------------------------------------------
+
+def alpha_ratio(remote_rows_per_iter: int, feature_dim: int,
+                param_bytes: int) -> float:
+    """α = remote-fetched feature bytes per iteration / model parameter bytes.
+    α ≫ 1 is the regime where feature-centric training wins (Fig. 5:
+    13.4 … 2368.1)."""
+    return remote_rows_per_iter * feature_dim * F32 / max(param_bytes, 1)

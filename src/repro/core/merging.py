@@ -1,0 +1,123 @@
+"""Micrograph merging (paper §5.3): adaptive time-step reduction.
+
+Merging trades remote-fetch volume against per-step overhead (kernel
+launches, synchronization). The controller reproduces the paper's algorithm:
+
+* *Which*: rank time steps by total root count (the paper's proxy for
+  Num_vertex, decided before sampling); pick ts_min.
+* *How*:  redistribute each model's ts_min roots evenly over that model's
+  remaining steps (Fig. 10), keeping per-model batch composition intact —
+  the accuracy-fidelity invariant.
+* *How many*: an examination period starting at epoch 2 — keep merging while
+  the measured epoch time improves; then freeze the pattern.
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.micrograph import AssignmentMatrix
+
+
+def merge_min_step(amat: AssignmentMatrix,
+                   ts_min: Optional[int] = None) -> AssignmentMatrix:
+    """Fold the lightest time step into the remaining ones (one §5.3 round).
+
+    Each model's groups at ts_min are split evenly across the model's other
+    steps; the merged roots execute on the *hosting* server of the target
+    step (locality loss is the cost the examination period measures).
+    """
+    if amat.num_steps <= 1:
+        return amat
+    counts = amat.root_counts().sum(axis=1)      # (T,)
+    t_min = int(np.argmin(counts)) if ts_min is None else ts_min
+    T = amat.num_steps
+
+    # model -> its (server, roots) at t_min, and its target (server, step)s
+    new_groups: dict = {}
+    per_model_targets: dict[int, list[tuple[int, int]]] = {}
+    for (s, t), gs in amat.groups.items():
+        if t == t_min:
+            continue
+        nt = t if t < t_min else t - 1
+        new_groups.setdefault((s, nt), []).extend(
+            (d, r.copy()) for d, r in gs)
+        for d, _ in gs:
+            per_model_targets.setdefault(d, []).append((s, nt))
+
+    for (s, t), gs in amat.groups.items():
+        if t != t_min:
+            continue
+        for d, roots in gs:
+            targets = per_model_targets.get(d)
+            if not targets:
+                # model d only trained at t_min: keep it at step 0 on the
+                # same server (degenerate but load-consistent).
+                new_groups.setdefault((s, 0), []).append((d, roots.copy()))
+                continue
+            chunks = np.array_split(roots, len(targets))
+            for (ts_s, ts_t), chunk in zip(targets, chunks):
+                if chunk.size:
+                    new_groups.setdefault((ts_s, ts_t), []).append((d, chunk))
+
+    return AssignmentMatrix(num_shards=amat.num_shards, num_steps=T - 1,
+                            groups=new_groups)
+
+
+def merge_random_step(amat: AssignmentMatrix, rng: np.random.Generator
+                      ) -> AssignmentMatrix:
+    """RD baseline of §7.4: merge a uniformly random step (load-oblivious)."""
+    t = int(rng.integers(0, amat.num_steps))
+    return merge_min_step(amat, ts_min=t)
+
+
+@dataclasses.dataclass
+class MergingController:
+    """Epoch-level examination loop (§5.3 'How many').
+
+    Call ``assignment_for_epoch()`` before each epoch and
+    ``record_epoch_time(seconds)`` after it. From epoch 2 on, the controller
+    proposes one more merge per epoch while measured time improves, then
+    freezes."""
+
+    base: AssignmentMatrix
+    selector: str = "min"          # "min" (paper) | "random" (RD baseline)
+    seed: int = 0
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+        self._current = self.base
+        self._previous: Optional[AssignmentMatrix] = None
+        self._times: list[float] = []
+        self._frozen = False
+        self.history: list[int] = [self.base.num_steps]
+
+    @property
+    def frozen(self) -> bool:
+        return self._frozen
+
+    def assignment_for_epoch(self) -> AssignmentMatrix:
+        return self._current
+
+    def record_epoch_time(self, seconds: float) -> None:
+        self._times.append(seconds)
+        if self._frozen:
+            return
+        if len(self._times) >= 2 and self._times[-1] >= self._times[-2]:
+            # regression: revert to the previous pattern and freeze (§5.3)
+            if self._previous is not None:
+                self._current = self._previous
+            self._frozen = True
+            self.history.append(self._current.num_steps)
+            return
+        if self._current.num_steps > 1:
+            self._previous = self._current
+            self._current = (merge_min_step(self._current)
+                             if self.selector == "min"
+                             else merge_random_step(self._current, self._rng))
+            self.history.append(self._current.num_steps)
+        else:
+            self._frozen = True

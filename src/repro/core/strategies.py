@@ -1,0 +1,255 @@
+"""Iteration planner: strategy -> device-ready IterationPlan.
+
+The planner is the host-side half of HopGNN (sampling and bookkeeping run on
+CPU in DGL too). It consumes a training-strategy name plus the mini-batch
+and emits rectangular numpy arrays the device engine executes without any
+dynamic shapes:
+
+  * ``model_centric`` — DGL baseline: one step, no redistribution; every
+    shard fetches the (deduplicated) remote features of its whole subgraph.
+  * ``hopgnn``        — §5.1 micrograph training: redistribution by home
+    server, N rotating time steps, gradient accumulation. Pre-gathering
+    (§5.2) and merging (§5.3) are orthogonal switches.
+  * ``lo``            — locality-optimized baseline (§7.9): home-grouped,
+    one step, no migration — fast but biased batches.
+
+The *naive feature-centric* strategy of §3.2 is reproduced in
+:mod:`repro.core.comm_model` as byte accounting only: its numerics equal
+model-centric training (it computes the same subgraphs, just elsewhere), and
+its defining cost — shipping model + activations every hop — has no SPMD
+realization worth building (parameters are already replicated; see
+DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal, Optional, Sequence
+
+import numpy as np
+
+from repro.graph.sampler import TreeBlock, sample_tree_block
+from repro.graph.structs import CSRGraph
+from repro.core.micrograph import (
+    AssignmentMatrix, hopgnn_assignment, lo_assignment,
+    model_centric_assignment,
+)
+from repro.core.pregather import GatherPlan, build_gather_plan, workspace_indices
+
+Strategy = Literal["model_centric", "hopgnn", "lo"]
+
+
+@dataclasses.dataclass
+class IterationPlan:
+    """Device-ready arrays (all stacked over the shard axis 0) + accounting.
+
+    Workspace layout on shard s: rows [0, local_rows) are the local feature
+    shard; rows [local_rows + p*r_max + j] hold the j-th pre-gathered row
+    from peer p. In per-step mode the remote region is rebuilt each step
+    from ``step_req``.
+    """
+
+    # --- static config ---
+    num_shards: int
+    num_steps: int
+    fanout: int
+    num_layers: int
+    pregather: bool
+    local_rows: int
+    r_max: int
+    batch_pad: int           # padded roots per (shard, step)
+    global_batch: int        # true total roots (loss normalization)
+
+    # --- device arrays ---
+    req: np.ndarray                      # (N, P, r_max) int32 (pregather) or
+    step_req: Optional[np.ndarray]       # (N, T, P, r_max) int32 (per-step)
+    hop_idx: list                        # [h]: (N, T, batch_pad * f**h) int32
+    labels: np.ndarray                   # (N, T, batch_pad) int32
+    weights: np.ndarray                  # (N, T, batch_pad) f32
+
+    # --- host accounting (exact, unpadded) ---
+    remote_rows_exact: int               # deduped remote feature rows fetched
+    remote_rows_nodedup: int             # without §5.2 dedup (per-step uniq)
+    total_rows: int                      # all feature rows touched (tree, dup)
+    unique_rows: int                     # deduped rows touched
+    step_unique_rows: int                # Σ per-(shard,step) unique rows
+    true_counts: np.ndarray              # (T, N) roots per (step, shard)
+    assignment: AssignmentMatrix
+
+    def miss_rate(self) -> float:
+        """Remote fraction of unique feature rows (paper Fig. 14)."""
+        return self.remote_rows_exact / max(self.unique_rows, 1)
+
+    def miss_rate_per_request(self) -> float:
+        """Fig. 14's cache view: of all feature *requests* (one per unique
+        vertex per (shard, step)), the fraction served remotely, without
+        §5.2's cross-step dedup."""
+        return self.remote_rows_nodedup / max(self.step_unique_rows, 1)
+
+    def device_args(self):
+        """The pytree handed to the device engine."""
+        return dict(req=self.req, step_req=self.step_req,
+                    hop_idx=list(self.hop_idx), labels=self.labels,
+                    weights=self.weights)
+
+
+def _assignment_for(strategy: Strategy, roots_per_model, part,
+                    override: Optional[AssignmentMatrix]) -> AssignmentMatrix:
+    if override is not None:
+        return override
+    if strategy == "model_centric":
+        return model_centric_assignment(roots_per_model)
+    if strategy == "hopgnn":
+        return hopgnn_assignment(roots_per_model, part)
+    if strategy == "lo":
+        return lo_assignment(roots_per_model, part)
+    raise ValueError(f"unknown strategy {strategy!r}")
+
+
+def plan_iteration(graph: CSRGraph,
+                   labels: np.ndarray,
+                   part: np.ndarray,
+                   owner: np.ndarray,
+                   local_idx: np.ndarray,
+                   local_rows: int,
+                   roots_per_model: Sequence[np.ndarray],
+                   num_layers: int,
+                   fanout: int,
+                   strategy: Strategy = "hopgnn",
+                   pregather: bool = True,
+                   assignment: Optional[AssignmentMatrix] = None,
+                   rng: Optional[np.random.Generator] = None,
+                   sample_seed: Optional[int] = None,
+                   batch_pad: Optional[int] = None,
+                   r_max: Optional[int] = None) -> IterationPlan:
+    """Compile one training iteration into an IterationPlan.
+
+    ``sample_seed`` switches to stateless per-root-deterministic sampling:
+    the tree below each root depends only on (root, seed), so two plans with
+    the same roots and seed — regardless of strategy — train *identical*
+    micrographs. This is the gradient-parity (accuracy fidelity) invariant.
+    """
+    if sample_seed is None:
+        rng = rng or np.random.default_rng(0)
+    n = len(roots_per_model)
+    if strategy == "lo":
+        # LO samples only within the local partition (that *is* the bias
+        # the paper measures in §7.9): drop cross-partition edges so every
+        # sampled neighbor — hence every feature — is local.
+        from repro.graph.partition import drop_cross_edges
+        graph = drop_cross_edges(graph, part)
+    amat = _assignment_for(strategy, [np.asarray(r, np.int64)
+                                      for r in roots_per_model], part, assignment)
+    T = amat.num_steps
+
+    # Padding roots must be *local* to their shard so they add no phantom
+    # remote traffic; precompute one local vertex per shard.
+    pad_vertex = np.zeros(n, np.int64)
+    for s in range(n):
+        loc = np.nonzero(owner == s)[0]
+        pad_vertex[s] = loc[0] if loc.size else 0
+
+    counts = amat.root_counts()                      # (T, N)
+    if batch_pad is None:
+        batch_pad = max(1, int(counts.max()))
+    if counts.max() > batch_pad:
+        raise ValueError(f"batch_pad {batch_pad} < max group {counts.max()}")
+
+    # ---- sample one padded TreeBlock per (shard, step) ----
+    blocks: list[list[TreeBlock]] = []          # [s][t]
+    lab_arr = np.zeros((n, T, batch_pad), np.int32)
+    w_arr = np.zeros((n, T, batch_pad), np.float32)
+    true_root_blocks: list[TreeBlock] = []      # unpadded, for accounting
+    for s in range(n):
+        row = []
+        for t in range(T):
+            roots = amat.roots_at(s, t)
+            k = roots.size
+            if k:
+                lab_arr[s, t, :k] = labels[roots]
+                w_arr[s, t, :k] = 1.0
+            padded = np.concatenate(
+                [roots, np.full(batch_pad - k, pad_vertex[s], np.int64)])
+            blk = sample_tree_block(graph, padded, num_layers, fanout,
+                                    rng=rng, seed=sample_seed)
+            row.append(blk)
+            if k:
+                true_root_blocks.append(blk.select(np.arange(k)))
+        blocks.append(row)
+
+    # ---- gather plans ----
+    def shard_needed(s: int, ts: Sequence[int]) -> np.ndarray:
+        ids = [blocks[s][t].all_ids() for t in ts]
+        return np.concatenate(ids) if ids else np.zeros(0, np.int64)
+
+    hop_sizes = [batch_pad * fanout ** h for h in range(num_layers + 1)]
+    hop_idx = [np.zeros((n, T, sz), np.int32) for sz in hop_sizes]
+
+    if pregather:
+        plan = build_gather_plan([shard_needed(s, range(T)) for s in range(n)],
+                                 owner, local_idx, n, local_rows, r_max)
+        req, step_req = plan.req, None
+        r_max_eff = plan.r_max
+        for s in range(n):
+            for t in range(T):
+                widx = workspace_indices(blocks[s][t].hops, s, owner,
+                                         local_idx, plan)
+                for h in range(num_layers + 1):
+                    hop_idx[h][s, t] = widx[h]
+        remote_exact = plan.remote_rows_exact()
+    else:
+        # per-step exchange: dedup within a step only — redundant fetches
+        # across steps remain (that is exactly what §5.2 eliminates).
+        step_plans = [build_gather_plan([shard_needed(s, [t]) for s in range(n)],
+                                        owner, local_idx, n, local_rows, r_max)
+                      for t in range(T)]
+        r_max_eff = r_max or max(p.r_max for p in step_plans)
+        if any(p.req_count.max() > r_max_eff for p in step_plans):
+            raise ValueError("per-step pregather overflow")
+        step_req = np.zeros((n, T, n, r_max_eff), np.int32)
+        for t, p in enumerate(step_plans):
+            if p.r_max != r_max_eff:   # rebuild with the common r_max
+                p = build_gather_plan([shard_needed(s, [t]) for s in range(n)],
+                                      owner, local_idx, n, local_rows, r_max_eff)
+                step_plans[t] = p
+            step_req[:, t] = p.req
+            for s in range(n):
+                widx = workspace_indices(blocks[s][t].hops, s, owner,
+                                         local_idx, p)
+                for h in range(num_layers + 1):
+                    hop_idx[h][s, t] = widx[h]
+        req = np.zeros((n, n, r_max_eff), np.int32)  # unused in per-step mode
+        remote_exact = sum(p.remote_rows_exact() for p in step_plans)
+
+    # ---- accounting over true (unpadded) roots ----
+    total_rows = sum(b.num_feature_rows() for b in true_root_blocks)
+    uniq_all: list[np.ndarray] = []
+    remote_nodedup = 0
+    step_unique = 0
+    for s in range(n):
+        per_step_ids = []
+        for t in range(T):
+            roots = amat.roots_at(s, t)
+            if roots.size == 0:
+                continue
+            ids = blocks[s][t].select(np.arange(roots.size)).all_ids()
+            per_step_ids.append(ids)
+        if per_step_ids:
+            allids = np.concatenate(per_step_ids)
+            uniq_all.append(np.unique(allids))
+            for ids in per_step_ids:
+                u = np.unique(ids)
+                step_unique += u.size
+                remote_nodedup += int((owner[u] != s).sum())
+    unique_rows = int(sum(u.size for u in uniq_all))
+
+    return IterationPlan(
+        num_shards=n, num_steps=T, fanout=fanout, num_layers=num_layers,
+        pregather=pregather, local_rows=local_rows, r_max=r_max_eff,
+        batch_pad=batch_pad,
+        global_batch=int(sum(np.asarray(r).size for r in roots_per_model)),
+        req=req, step_req=step_req, hop_idx=hop_idx, labels=lab_arr,
+        weights=w_arr,
+        remote_rows_exact=remote_exact, remote_rows_nodedup=remote_nodedup,
+        total_rows=total_rows, unique_rows=unique_rows,
+        step_unique_rows=step_unique,
+        true_counts=counts, assignment=amat)

@@ -1,0 +1,10 @@
+"""Synthetic seeded data pipeline for the LLM configs.
+
+Deterministic token streams (hash-based, like the graph sampler) so every
+run and every test sees the same data without shipping a corpus. Batches
+carry whatever extra modality inputs the family needs (stub patch/frame
+embeddings for vlm/audio — the assignment's one sanctioned stub).
+"""
+from repro.data.pipeline import token_batches, make_batch
+
+__all__ = ["token_batches", "make_batch"]

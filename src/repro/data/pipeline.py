@@ -1,0 +1,56 @@
+"""Synthetic token/modality batches, seeded and deterministic.
+
+Tokens follow a Zipfian unigram draw with a Markov bigram twist so the loss
+has learnable structure (pure-uniform tokens give a constant-loss landscape
+and hide optimizer bugs). Modality stubs (patches/frames) are unit-Gaussian
+embeddings of the configured width.
+"""
+from __future__ import annotations
+
+from typing import Iterator
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.models.transformer.config import ArchConfig
+
+
+def _zipf_markov_tokens(rng: np.random.Generator, batch: int, seq: int,
+                        vocab: int) -> np.ndarray:
+    ranks = np.arange(1, vocab + 1, dtype=np.float64)
+    p = 1.0 / ranks
+    p /= p.sum()
+    toks = rng.choice(vocab, size=(batch, seq), p=p).astype(np.int32)
+    # Markov twist: with prob .5, token t+1 = f(token t) — learnable bigram
+    follow = rng.permutation(vocab).astype(np.int32)
+    mask = rng.random((batch, seq - 1)) < 0.5
+    toks[:, 1:] = np.where(mask, follow[toks[:, :-1]], toks[:, 1:])
+    return toks
+
+
+def make_batch(cfg: ArchConfig, batch: int, seq: int, seed: int) -> dict:
+    rng = np.random.default_rng(seed)
+    out: dict = {}
+    if cfg.family == "vlm":
+        P = min(cfg.num_patches, max(seq // 4, 1))
+        out["patches"] = jnp.asarray(
+            rng.standard_normal((batch, P, cfg.patch_dim), dtype=np.float32))
+        out["tokens"] = jnp.asarray(
+            _zipf_markov_tokens(rng, batch, seq - P, cfg.vocab_size))
+    elif cfg.family == "audio":
+        De = cfg.encoder_d_model or cfg.d_model
+        out["frames"] = jnp.asarray(
+            rng.standard_normal((batch, cfg.encoder_seq, De),
+                                dtype=np.float32))
+        out["tokens"] = jnp.asarray(
+            _zipf_markov_tokens(rng, batch, seq, cfg.vocab_size))
+    else:
+        out["tokens"] = jnp.asarray(
+            _zipf_markov_tokens(rng, batch, seq, cfg.vocab_size))
+    return out
+
+
+def token_batches(cfg: ArchConfig, batch: int, seq: int, steps: int,
+                  seed: int = 0) -> Iterator[dict]:
+    for i in range(steps):
+        yield make_batch(cfg, batch, seq, seed * 100_003 + i)

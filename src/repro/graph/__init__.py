@@ -1,0 +1,17 @@
+"""Graph substrate: CSR storage, synthetic datasets, partitioning, sampling.
+
+Everything in this package is *host-side* (numpy): in DGL — and in HopGNN,
+which builds on it — graph sampling and partition bookkeeping run on CPU,
+feeding fixed-shape tensors to the accelerator. We keep that split: this
+package never imports jax.
+"""
+from repro.graph.structs import CSRGraph, GraphDataset
+from repro.graph.synthetic import make_dataset, DATASETS
+from repro.graph.partition import hash_partition, ldg_partition, range_partition
+from repro.graph.sampler import sample_tree_block, layerwise_sample, TreeBlock
+
+__all__ = [
+    "CSRGraph", "GraphDataset", "make_dataset", "DATASETS",
+    "hash_partition", "ldg_partition", "range_partition",
+    "sample_tree_block", "layerwise_sample", "TreeBlock",
+]

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+* ``gather_agg``  — feature-row gather / fused gather+aggregate (the GNN
+  SpMM hot-spot re-expressed on the fixed-fanout tree layout).
+* ``linattn``     — chunked RWKV6-style gated linear attention (the rwkv6-7b
+  assigned-arch hot-spot).
+* ``ops``         — platform-dispatching jit wrappers (call these).
+* ``ref``         — pure-jnp oracles defining each kernel's semantics.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

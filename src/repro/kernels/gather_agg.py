@@ -1,0 +1,120 @@
+"""Pallas TPU kernels: feature-row gather and fused gather+aggregate.
+
+These are the compute hot-spots of HopGNN's data path (DESIGN.md §2):
+
+* ``gather_rows``  — workspace row gather ``out[i] = table[idx[i]]``; the
+  inner op of pre-gathering (§5.2) and of every tree-block feature load.
+* ``gather_agg``   — fused neighbor gather + segment reduction over the
+  fixed-fanout axis, replacing DGL's SpMM. On GPU this is a scatter-based
+  sparse kernel; the TPU-native re-expression uses the *regular* (n, f)
+  neighbor-index matrix: each grid step DMAs one feature row (sublane-
+  aligned) from the table and accumulates into the output block resident in
+  VMEM — no atomics (TPU has none), no scatter, MXU-friendly d-tiles.
+
+Both use ``PrefetchScalarGridSpec``: the index matrix is scalar-prefetched
+into SMEM so the BlockSpec ``index_map`` can steer each grid step's DMA to
+the dynamically-selected table row — the canonical Pallas-TPU gather
+pattern. Feature dim is tiled at 128 lanes (MXU/VPU width).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANE = 128  # TPU lane width; feature tiles are multiples of this
+
+
+def _dblk(d: int) -> int:
+    """Feature-dim block: one lane tile if possible, whole dim if small."""
+    return LANE if d % LANE == 0 else d
+
+
+# ---------------------------------------------------------------------------
+# gather_rows: out[i] = table[idx[i]]
+# ---------------------------------------------------------------------------
+
+def _gather_rows_kernel(idx_ref, table_ref, out_ref):
+    # table_ref block = (1, dblk) row slice steered by index_map; copy out.
+    out_ref[...] = table_ref[...]
+
+
+def gather_rows(table: jnp.ndarray, idx: jnp.ndarray,
+                interpret: bool = False) -> jnp.ndarray:
+    """table: (R, d), idx: (n,) int32 -> (n, d)."""
+    n = idx.shape[0]
+    d = table.shape[1]
+    dblk = _dblk(d)
+    grid = (n, d // dblk)
+    return pl.pallas_call(
+        _gather_rows_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, dblk), lambda i, j, idx_ref: (idx_ref[i], j)),
+            ],
+            out_specs=pl.BlockSpec((1, dblk), lambda i, j, idx_ref: (i, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((n, d), table.dtype),
+        interpret=interpret,
+    )(idx, table)
+
+
+# ---------------------------------------------------------------------------
+# gather_agg: out[i] = reduce_j table[idx[i, j]]
+# ---------------------------------------------------------------------------
+
+def _gather_agg_kernel(idx_ref, table_ref, out_ref, *, fanout: int,
+                       reduce: str):
+    j = pl.program_id(1)  # fanout position (innermost revisits out block)
+    row = table_ref[...].astype(jnp.float32)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = row
+
+    @pl.when(j > 0)
+    def _acc():
+        if reduce == "max":
+            out_ref[...] = jnp.maximum(out_ref[...], row)
+        else:
+            out_ref[...] = out_ref[...] + row
+
+    if reduce == "mean":
+        @pl.when(j == fanout - 1)
+        def _norm():
+            out_ref[...] = out_ref[...] / fanout
+
+
+def gather_agg(table: jnp.ndarray, idx: jnp.ndarray, reduce: str = "sum",
+               interpret: bool = False) -> jnp.ndarray:
+    """table: (R, d), idx: (n, f) int32 -> (n, d) reduced over f.
+
+    Grid is (n, f, d_tiles); the output block (i, :) stays resident in VMEM
+    across the f accumulation steps (TPU grids execute sequentially, so
+    revisiting an output block is the supported accumulate idiom).
+    """
+    n, f = idx.shape
+    d = table.shape[1]
+    dblk = _dblk(d)
+    kern = functools.partial(_gather_agg_kernel, fanout=f, reduce=reduce)
+    out = pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n, f, d // dblk),
+            in_specs=[
+                pl.BlockSpec((1, dblk),
+                             lambda i, j, t, idx_ref: (idx_ref[i, j], t)),
+            ],
+            out_specs=pl.BlockSpec((1, dblk),
+                                   lambda i, j, t, idx_ref: (i, t)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        interpret=interpret,
+    )(idx, table)
+    return out.astype(table.dtype)

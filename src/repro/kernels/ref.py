@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function defines the *semantics* of the matching kernel; tests sweep
+shapes/dtypes and assert the kernel (interpret=True on CPU) matches these
+references to float tolerance.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_rows_ref(table: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """out[i] = table[idx[i]].  table: (R, d), idx: (n,) int32 -> (n, d)."""
+    return jnp.take(table, idx, axis=0)
+
+
+def gather_agg_ref(table: jnp.ndarray, idx: jnp.ndarray,
+                   reduce: str = "sum") -> jnp.ndarray:
+    """Fused neighbor gather + aggregate (DGL's SpMM on the fixed-fanout
+    tree layout). table: (R, d), idx: (n, f) -> (n, d)."""
+    rows = jnp.take(table, idx.reshape(-1), axis=0)
+    rows = rows.reshape(idx.shape[0], idx.shape[1], table.shape[1])
+    if reduce == "sum":
+        return rows.sum(axis=1)
+    if reduce == "mean":
+        return rows.mean(axis=1)
+    if reduce == "max":
+        return rows.max(axis=1)
+    raise ValueError(reduce)
+
+
+def linattn_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                w: jnp.ndarray, u: jnp.ndarray,
+                state: jnp.ndarray | None = None
+                ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """RWKV6-style gated linear attention, token-by-token scan.
+
+    Per (batch·head): with S ∈ (dk, dv), for t = 1..T
+        o_t = q_t · S  +  (q_t ⊙ u) · k_t) v_t          (bonus current token)
+        S   = diag(w_t) S + k_t ⊗ v_t                   (data-dependent decay)
+
+    Shapes: q,k,w: (BH, T, dk); v: (BH, T, dv); u: (dk,) or (BH, dk)
+    (per-head bonus); state: (BH, dk, dv) or None (zeros).
+    Returns (o: (BH, T, dv), S_out).
+    """
+    BH, T, dk = q.shape
+    dv = v.shape[-1]
+    if state is None:
+        state = jnp.zeros((BH, dk, dv), jnp.float32)
+    u2 = jnp.broadcast_to(u, (BH, dk)).astype(jnp.float32)
+
+    def step(S, qkvw, ub):
+        qt, kt, vt, wt = qkvw
+        o = qt @ S + ((qt * ub) * kt).sum() * vt
+        S = wt[:, None] * S + kt[:, None] * vt[None, :]
+        return S, o
+
+    def per_bh(S0, q1, k1, v1, w1, ub):
+        S, o = jax.lax.scan(
+            lambda S, x: step(S, x, ub), S0,
+            (q1.astype(jnp.float32), k1.astype(jnp.float32),
+             v1.astype(jnp.float32), w1.astype(jnp.float32)))
+        return o, S
+
+    o, S = jax.vmap(per_bh)(state, q, k, v, w, u2)
+    return o.astype(q.dtype), S

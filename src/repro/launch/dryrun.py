@@ -1,0 +1,318 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × input shape × mesh).
+
+This is how the distribution config is proven coherent without hardware:
+``jax.jit(step, in_shardings=…).lower(**ShapeDtypeStructs).compile()`` runs
+GSPMD partitioning and XLA compilation for the full production mesh on 512
+placeholder host devices — sharding mismatches, compile-time OOMs and
+unsupported collectives all surface here as hard failures.
+
+Per combination we record ``memory_analysis()`` (proves it fits),
+``cost_analysis()`` (FLOPs/bytes for §Roofline) and the collective-op byte
+census parsed from the optimized HLO, into benchmarks/results/dryrun/*.json.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--skip-done]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (SHAPES, ARCH_IDS, get_config, input_specs,
+                           shape_applicable)
+from repro.launch.mesh import make_production_mesh
+from repro.launch import sharding as shd
+from repro.launch.train import make_train_step, pick_accum, pick_optimizer
+from repro.models.transformer import (decode_step, forward, init_decode_state,
+                                      init_params, prefill)
+from repro.models.transformer.common import set_mesh_axes
+from repro.models.transformer.model import scan_length, set_scan_unroll
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+_COLL_RE = re.compile(
+    r"=\s+((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\]\S*))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)")
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8\w*|s64|s32|u64|u32|s16|u16|"
+                       r"s8|u8|pred)\[([0-9,]*)\]")
+_ITEM = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+         "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+         "pred": 1}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-shape bytes of every collective op in the optimized HLO.
+
+    Documented approximation (DESIGN.md §5): for all-gather this counts the
+    gathered output (upper-bounds per-link traffic); for reduce-scatter the
+    scattered output (lower bound). Start/done async pairs are counted once
+    (the -start op carries the shape)."""
+    per_op: dict[str, int] = {}
+    count: dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, op = m.group(1), m.group(2)
+        total = 0
+        for sm in _SHAPE_RE.finditer(shape_str):
+            dtype, dims = sm.group(1), sm.group(2)
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * _ITEM.get(dtype.split("[")[0][:4].rstrip("["), 4)
+        per_op[op] = per_op.get(op, 0) + total
+        count[op] = count.get(op, 0) + 1
+    return {"bytes_by_op": per_op, "count_by_op": count,
+            "total_bytes": sum(per_op.values())}
+
+
+def _abstract(fn, *args, **kw):
+    return jax.eval_shape(fn, *args, **kw)
+
+
+def lower_combo(arch: str, shape_name: str, multi_pod: bool,
+                moe_dispatch: str | None = None,
+                fsdp: bool = True,
+                seq_shard: bool = True,
+                accum: int | None = None,
+                kv_tp_repeat: int = 1,
+                remat_policy: str = "full",
+                extra_tag: str = "") -> dict:
+    """Lower + compile one (arch, shape, mesh) and return the record."""
+    import dataclasses
+    cfg = get_config(arch)
+    if moe_dispatch and cfg.moe_num_experts:
+        cfg = dataclasses.replace(cfg, moe_dispatch=moe_dispatch)
+    if kv_tp_repeat > 1:
+        cfg = dataclasses.replace(cfg, kv_tp_repeat=kv_tp_repeat)
+    ok, reason = shape_applicable(cfg, shape_name)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "family": cfg.family, "tag": extra_tag}
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    set_mesh_axes(dp=shd.dp_axes(mesh), tp=("model",))
+    from repro.models.transformer.model import (set_remat_policy,
+                                                set_sequence_sharding)
+    set_sequence_sharding(seq_shard)
+    set_remat_policy(remat_policy)
+    rec["seq_shard"] = seq_shard
+    rec["remat_policy"] = remat_policy
+    sh = SHAPES[shape_name]
+
+    params_shape = _abstract(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    p_specs = shd.param_pspecs(params_shape, fsdp=fsdp)
+    rec["fsdp"] = fsdp
+    data_shape = input_specs(cfg, shape_name)
+
+    t0 = time.perf_counter()
+
+    def build_lowered():
+        if sh.kind == "train":
+            opt = pick_optimizer(cfg)
+            opt_shape = _abstract(opt.init, params_shape)
+            o_specs = shd.opt_pspecs(opt_shape, p_specs)
+            b_specs = shd.batch_pspecs(cfg, mesh, data_shape)
+            accum_eff = accum or pick_accum(cfg, sh.global_batch)
+            rec["accum"] = accum_eff
+            step = make_train_step(cfg, opt, accum=accum_eff)
+            jitted = jax.jit(
+                step,
+                in_shardings=(shd.to_shardings(mesh, p_specs),
+                              shd.to_shardings(mesh, o_specs),
+                              shd.to_shardings(mesh, b_specs)),
+                out_shardings=(shd.to_shardings(mesh, p_specs),
+                               shd.to_shardings(mesh, o_specs), None))
+            lowered = jitted.lower(params_shape, opt_shape, data_shape)
+        elif sh.kind == "prefill":
+            b_specs = shd.batch_pspecs(cfg, mesh, data_shape)
+
+            def prefill_step(params, batch):
+                from repro.models.transformer.model import (_head_matrix,
+                                                            forward_hidden)
+                x, _ = forward_hidden(params, cfg, batch)
+                return x[:, -1] @ _head_matrix(params)
+            jitted = jax.jit(
+                prefill_step,
+                in_shardings=(shd.to_shardings(mesh, p_specs),
+                              shd.to_shardings(mesh, b_specs)))
+            lowered = jitted.lower(params_shape, data_shape)
+        else:  # decode
+            B, S = sh.global_batch, sh.seq_len
+            if cfg.family == "audio":
+                De = cfg.encoder_d_model or cfg.d_model
+                enc_shape = jax.ShapeDtypeStruct(
+                    (B, cfg.encoder_seq, De), cfg.activation_dtype)
+                state_shape = _abstract(
+                    lambda p, e: init_decode_state(cfg, B, S, enc=e,
+                                                   params=p),
+                    params_shape, enc_shape)
+            else:
+                state_shape = _abstract(lambda: init_decode_state(cfg, B, S))
+            s_specs = shd.decode_state_pspecs(cfg, mesh, state_shape)
+            tok_spec = jax.sharding.PartitionSpec(
+                shd.dp_for_batch(mesh, B))
+
+            def serve_step(params, token, state):
+                return decode_step(params, cfg, token, state)
+            jitted = jax.jit(
+                serve_step,
+                in_shardings=(shd.to_shardings(mesh, p_specs),
+                              jax.NamedSharding(mesh, tok_spec),
+                              shd.to_shardings(mesh, s_specs)),
+                out_shardings=(None, shd.to_shardings(mesh, s_specs)))
+            lowered = jitted.lower(
+                params_shape, jax.ShapeDtypeStruct((B,), jnp.int32),
+                state_shape)
+        return lowered
+
+    # XLA counts while-loop bodies ONCE in cost_analysis; compile at
+    # unroll=1 and unroll=2 and extrapolate: true = f1 + (L-1)·(f2-f1).
+    L = scan_length(cfg)
+    results = {}
+    with mesh:
+        for unroll in (1, 2):
+            set_scan_unroll(unroll)
+            try:
+                compiled = build_lowered().compile()
+            finally:
+                set_scan_unroll(1)
+            cost = compiled.cost_analysis()
+            results[unroll] = {
+                "flops": float(cost.get("flops", 0.0)),
+                "bytes": float(cost.get("bytes accessed", 0.0)),
+                "coll": collective_bytes(compiled.as_text()),
+                "compiled": compiled,
+            }
+            if L <= 1:
+                results[2] = results[1]
+                break
+
+    t1 = time.perf_counter()
+    f1, f2 = results[1]["flops"], results[2]["flops"]
+    b1, b2 = results[1]["bytes"], results[2]["bytes"]
+    c1 = results[1]["coll"]["total_bytes"]
+    c2 = results[2]["coll"]["total_bytes"]
+    flops_true = f1 + max(0.0, f2 - f1) * (L - 1)
+    bytes_true = b1 + max(0.0, b2 - b1) * (L - 1)
+    coll_true = c1 + max(0, c2 - c1) * (L - 1)
+    ops1 = results[1]["coll"]["bytes_by_op"]
+    ops2 = results[2]["coll"]["bytes_by_op"]
+    coll_by_op_true = {
+        op: ops1.get(op, 0) + max(0, ops2.get(op, 0) - ops1.get(op, 0))
+        * (L - 1)
+        for op in set(ops1) | set(ops2)}
+
+    compiled = results[1]["compiled"]
+    mem = compiled.memory_analysis()
+    rec.update(
+        status="ok",
+        compile_seconds=round(t1 - t0, 1),
+        memory={k: int(getattr(mem, k, 0)) for k in
+                ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes")},
+        scan_length=L,
+        flops_hlo_raw=f1,
+        flops=flops_true,
+        bytes_accessed_raw=b1,
+        bytes_accessed=bytes_true,
+        collectives=results[1]["coll"],
+        collective_bytes_total=coll_true,
+        collective_bytes_by_op=coll_by_op_true,
+        params=cfg.param_count(),
+        active_params=cfg.active_param_count(),
+    )
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--moe-dispatch", default=None,
+                    help="override MoE dispatch mode (tokens|weights|auto)")
+    ap.add_argument("--no-fsdp", action="store_true",
+                    help="TP-only parameters (no data-axis sharding)")
+    ap.add_argument("--no-seq-shard", action="store_true",
+                    help="disable sequence-parallel carry sharding")
+    ap.add_argument("--accum", type=int, default=None,
+                    help="override gradient-accumulation microbatch count")
+    ap.add_argument("--kv-tp-repeat", type=int, default=1,
+                    help="KV-head replication factor for TP")
+    ap.add_argument("--remat-policy", default="full",
+                    choices=["full", "dots"],
+                    help="per-layer checkpoint policy")
+    ap.add_argument("--tag", default="", help="suffix for the result file")
+    ap.add_argument("--skip-done", action="store_true")
+    args = ap.parse_args()
+
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    combos = []
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+    if args.all:
+        for a in ARCH_IDS:
+            for s in SHAPES:
+                for mp in meshes:
+                    combos.append((a, s, mp))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        for mp in meshes:
+            combos.append((args.arch, args.shape, mp))
+
+    n_ok = n_skip = n_fail = 0
+    for arch, shape_name, mp in combos:
+        tagsfx = f".{args.tag}" if args.tag else ""
+        fname = RESULTS_DIR / (
+            f"{arch}.{shape_name}.{'2x16x16' if mp else '16x16'}{tagsfx}.json")
+        if args.skip_done and fname.exists():
+            existing = json.loads(fname.read_text())
+            if existing.get("status") in ("ok", "skipped"):
+                print(f"[cached ] {fname.name}")
+                n_ok += existing["status"] == "ok"
+                n_skip += existing["status"] == "skipped"
+                continue
+        try:
+            rec = lower_combo(arch, shape_name, mp,
+                              moe_dispatch=args.moe_dispatch,
+                              fsdp=not args.no_fsdp,
+                              seq_shard=not args.no_seq_shard,
+                              accum=args.accum,
+                              kv_tp_repeat=args.kv_tp_repeat,
+                              remat_policy=args.remat_policy,
+                              extra_tag=args.tag)
+        except Exception as e:                        # noqa: BLE001
+            rec = {"arch": arch, "shape": shape_name,
+                   "mesh": "2x16x16" if mp else "16x16",
+                   "status": "failed", "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-2000:]}
+        fname.write_text(json.dumps(rec, indent=1))
+        s = rec["status"]
+        n_ok += s == "ok"
+        n_skip += s == "skipped"
+        n_fail += s == "failed"
+        extra = (f" {rec.get('compile_seconds', '')}s "
+                 f"flops={rec.get('flops', 0):.3g}" if s == "ok" else
+                 rec.get("reason", rec.get("error", "")))
+        print(f"[{s:7s}] {arch} × {shape_name} × "
+              f"{'2x16x16' if mp else '16x16'}{extra}")
+    print(f"\ndone: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,230 @@
+"""GSPMD sharding policy for the assigned-architecture stack.
+
+Parameters follow an FSDP × TP recipe (DESIGN.md §4):
+
+* weight matrices shard their *input-feature* dim over ``data`` (ZeRO-3
+  style; gathered at use, which bounds per-device parameter memory — a hard
+  requirement for nemotron-4-340b) and their *output-feature* / head / ffn
+  dim over ``model`` (Megatron TP);
+* down-projections mirror that (model, data) so the TP collective pattern
+  is the canonical all-reduce pair;
+* under the multi-pod mesh, FSDP stays *within* a pod (axis ``data``) and
+  parameters replicate across ``pod`` — gradient all-reduce is the only
+  cross-pod collective.
+
+Decode caches shard batch over dp and the 32k sequence (dense caches) over
+``model`` — without seq-sharding a 96-layer 32k cache would not fit a v5e.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.tree_util import DictKey, SequenceKey
+
+from repro.models.transformer.config import ArchConfig
+
+DATA, MODEL = "data", "model"
+
+
+def dp_axes(mesh: Mesh):
+    """Batch axes: ('pod', 'data') on a multi-pod mesh, else 'data'."""
+    return ("pod", DATA) if "pod" in mesh.axis_names else (DATA,)
+
+
+def dp_for_batch(mesh: Mesh, batch: int):
+    """The dp axis spec for a batch dim of the given size, degrading to
+    replication when the batch is too small to shard (long_500k has B=1)."""
+    axes = dp_axes(mesh)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    if batch % n == 0:
+        return axes if len(axes) > 1 else axes[0]
+    if batch % mesh.shape[DATA] == 0:
+        return DATA
+    return None
+
+
+# (containing key, leaf key) -> trailing-dims spec
+_RULES: dict[tuple[str, str], tuple] = {
+    # attention / generic linears (dicts with w/b)
+    ("wq", "w"): (DATA, MODEL), ("wk", "w"): (DATA, MODEL),
+    ("wv", "w"): (DATA, MODEL), ("wo", "w"): (MODEL, DATA),
+    ("wq", "b"): (MODEL,), ("wk", "b"): (MODEL,), ("wv", "b"): (MODEL,),
+    ("wo", "b"): (None,),
+    # mlp
+    ("wg", "w"): (DATA, MODEL), ("wu", "w"): (DATA, MODEL),
+    ("wd", "w"): (MODEL, DATA),
+    ("wg", "b"): (MODEL,), ("wu", "b"): (MODEL,), ("wd", "b"): (None,),
+    # rwkv time-mix & channel-mix
+    ("wr", "w"): (DATA, MODEL), ("wr", "b"): (MODEL,),
+    ("ck", "w"): (DATA, MODEL), ("ck", "b"): (MODEL,),
+    ("cr", "w"): (DATA, MODEL), ("cr", "b"): (MODEL,),
+    ("cv", "w"): (MODEL, DATA), ("cv", "b"): (None,),
+    ("w_lora_a", "w"): (DATA, None), ("w_lora_b", "w"): (None, DATA),
+    # rglru
+    ("w_in", "w"): (DATA, MODEL), ("w_in", "b"): (MODEL,),
+    ("w_gate", "w"): (DATA, MODEL), ("w_gate", "b"): (MODEL,),
+    ("wa", "w"): (DATA, MODEL), ("wa", "b"): (MODEL,),
+    ("wi", "w"): (DATA, MODEL), ("wi", "b"): (MODEL,),
+    ("w_out", "w"): (MODEL, DATA), ("w_out", "b"): (None,),
+    # router / projections
+    ("router", "w"): (DATA, None),
+    ("patch_proj", "w"): (None, DATA), ("patch_proj", "b"): (None,),
+}
+
+# bare-array leaves keyed by their own name
+_LEAF_RULES: dict[str, tuple] = {
+    "embed": (MODEL, DATA),
+    "head": (DATA, MODEL),
+    "enc_pos": (None, None),
+    "conv_w": (None, MODEL), "conv_b": (MODEL,),
+    "lam": (MODEL,),
+    "mu": (None, None), "mu_c": (None, None),
+    "u": (None, None),
+    "w_base": (None,),
+    "gn_g": (None,), "gn_b": (None,),
+    "g": (None,), "b": (None,),          # norms
+    # MoE expert stacks (E, D, Fe) / (E, Fe, D): experts unsharded (60 ∤ 16),
+    # FSDP on D, TP on Fe — matches the moe_forward "weights" constraint.
+    "wg": (None, DATA, MODEL), "wu": (None, DATA, MODEL),
+    "wd": (None, MODEL, DATA),
+}
+
+
+def _key_str(entry) -> str:
+    if isinstance(entry, DictKey):
+        return str(entry.key)
+    if isinstance(entry, SequenceKey):
+        return f"[{entry.idx}]"
+    return str(entry)
+
+
+def _spec_for(path, leaf, fsdp: bool = True) -> P:
+    names = [_key_str(e) for e in path]
+    leaf_name = names[-1]
+    parent = names[-2] if len(names) >= 2 else ""
+    rule = _RULES.get((parent, leaf_name))
+    if rule is None:
+        rule = _LEAF_RULES.get(leaf_name)
+    if rule is None and leaf_name in ("w", "b"):
+        # generic linear under an unknown container: replicate
+        rule = (None,) * (1 if leaf_name == "b" else 2)
+    if rule is None:
+        rule = ()
+    if not fsdp:
+        # TP-only: drop the data-axis (ZeRO-3) factor — parameters
+        # replicate across data, eliminating per-microbatch all-gathers.
+        rule = tuple(None if ax == DATA else ax for ax in rule)
+    ndim = len(leaf.shape)
+    if len(rule) > ndim:       # e.g. scalar under a rule — replicate
+        rule = (None,) * ndim
+    pad = (None,) * (ndim - len(rule))   # leading layer-stack axes
+    return P(*(pad + tuple(rule)))
+
+
+def param_pspecs(params_shape: Any, fsdp: bool = True) -> Any:
+    """PartitionSpec pytree matching a params (shape) pytree.
+
+    ``fsdp=False`` → TP-only parameters (replicated over ``data``). §Perf
+    iteration 1: for ≤~20 B-param archs, per-device params fit under pure
+    TP, and dropping FSDP removes the per-microbatch parameter all-gather —
+    the dominant collective in every train_4k baseline."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: _spec_for(p, l, fsdp=fsdp), params_shape)
+
+
+def opt_pspecs(opt_state_shape: Any, params_pspecs: Any) -> Any:
+    """Optimizer state shards exactly like its parameter (ZeRO-1 via GSPMD);
+    scalars (step) replicate."""
+    def spec(leaf):
+        return P()
+    # AdamState(step, mu, nu): mu/nu mirror params
+    cls = type(opt_state_shape)
+    if hasattr(opt_state_shape, "mu"):
+        return cls(step=P(), mu=params_pspecs, nu=params_pspecs)
+    if hasattr(opt_state_shape, "momentum"):
+        mom = params_pspecs if opt_state_shape.momentum is not None else None
+        return cls(step=P(), momentum=mom)
+    return jax.tree.map(spec, opt_state_shape)
+
+
+# ---------------------------------------------------------------------------
+# Decode-state sharding
+# ---------------------------------------------------------------------------
+
+def _kv_cache_pspec(dp, seq_shard: bool, stacked: bool):
+    from repro.models.transformer.attention import KVCache
+    lead = (None,) if stacked else ()
+    seq_ax = MODEL if seq_shard else None
+    return KVCache(
+        k=P(*lead, dp, seq_ax, None, None),
+        v=P(*lead, dp, seq_ax, None, None),
+        pos=P(*((None,) * len(lead))) if lead else P())
+
+
+def decode_state_pspecs(cfg: ArchConfig, mesh: Mesh, state_shape) -> Any:
+    """Handcrafted per-family cache specs (DESIGN.md §4 sharding recipe)."""
+    from repro.models.transformer.model import DecodeState
+    from repro.models.transformer.rglru import RGLRUState
+    from repro.models.transformer.rwkv6 import RWKVState
+    from repro.models.transformer import encdec
+
+    leaves = [x for x in jax.tree.leaves(state_shape) if x.ndim >= 2]
+    batch = leaves[0].shape[1]          # every cache is (L/G, B, ...)
+    dp = dp_for_batch(mesh, batch)
+    fam = cfg.family
+
+    if fam in ("dense", "moe", "vlm"):
+        # seq-shard the cache only when it is actually long (windowed caches
+        # are small; replicating them avoids softmax cross-shard reductions)
+        cache_len = state_shape.caches.k.shape[2]
+        seq_shard = cache_len >= 8192
+        return DecodeState(caches=_kv_cache_pspec(dp, seq_shard, True),
+                           tail=None, enc=None)
+    if fam == "ssm":
+        return DecodeState(
+            caches=RWKVState(s=P(None, dp, MODEL, None, None),
+                             tm_x=P(None, dp, MODEL),
+                             cm_x=P(None, dp, MODEL)),
+            tail=None, enc=None)
+    if fam == "hybrid":
+        pat = tuple(cfg.block_pattern)
+
+        def pos_spec(kind, stacked):
+            if kind == "rec":
+                lead = (None,) if stacked else ()
+                return RGLRUState(h=P(*lead, dp, MODEL),
+                                  conv=P(*lead, dp, None, MODEL))
+            return _kv_cache_pspec(dp, seq_shard=False, stacked=stacked)
+        groups = {"blocks": tuple(pos_spec(pat[j], True)
+                                  for j in range(len(pat)))}
+        tail = [pos_spec(pat[j % len(pat)], False)
+                for j in range(len(state_shape.tail or []))]
+        return DecodeState(caches=groups, tail=tail, enc=None)
+    if fam == "audio":
+        cache_len = state_shape.caches.self_kv.k.shape[2]
+        return DecodeState(
+            caches=encdec.DecLayerCache(
+                self_kv=_kv_cache_pspec(dp, cache_len >= 8192, True),
+                cross_k=P(None, dp, None, None, None),
+                cross_v=P(None, dp, None, None, None)),
+            tail=None, enc=P(dp, None, None))
+    raise ValueError(fam)
+
+
+def batch_pspecs(cfg: ArchConfig, mesh: Mesh, batch_shape: dict) -> dict:
+    out = {}
+    for k, v in batch_shape.items():
+        dp = dp_for_batch(mesh, v.shape[0])
+        out[k] = P(dp, *([None] * (len(v.shape) - 1)))
+    return out
+
+
+def to_shardings(mesh: Mesh, pspecs):
+    return jax.tree.map(
+        lambda s: None if s is None else NamedSharding(mesh, s),
+        pspecs, is_leaf=lambda x: isinstance(x, P) or x is None)

@@ -1,0 +1,13 @@
+"""GNN model zoo (paper §7.1): GCN, GraphSAGE, GAT, DeepGCN, GNN-FiLM.
+
+All models operate on fixed-fanout *tree blocks* (see
+:mod:`repro.graph.sampler`): per-hop feature tensors of shape
+(B * f**h, d). This is the TPU-native re-expression of DGL's message-flow
+graphs — aggregation is a dense reshape+reduce, never a scatter.
+"""
+from repro.models.gnn.models import (
+    GNNConfig, MODEL_REGISTRY, init_gnn, gnn_forward, gnn_loss, model_param_bytes,
+)
+
+__all__ = ["GNNConfig", "MODEL_REGISTRY", "init_gnn", "gnn_forward",
+           "gnn_loss", "model_param_bytes"]

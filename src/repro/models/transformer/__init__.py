@@ -1,0 +1,14 @@
+"""Assigned-architecture transformer stack (DESIGN.md §4).
+
+Families: dense GQA (± SWA, ± QKV bias, swiglu/sqrelu/gelu), MoE
+(shared + routed top-k, HopMoE α-dispatch), RWKV6 SSM, RG-LRU hybrid,
+whisper-style encoder-decoder (audio), and VLM (stub patch frontend +
+dense decoder).
+"""
+from repro.models.transformer.config import ArchConfig
+from repro.models.transformer.model import (
+    DecodeState, decode_step, forward, init_decode_state, init_params,
+    loss_fn, prefill)
+
+__all__ = ["ArchConfig", "DecodeState", "decode_step", "forward",
+           "init_decode_state", "init_params", "loss_fn", "prefill"]

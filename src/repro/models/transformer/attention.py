@@ -1,0 +1,204 @@
+"""Grouped-query attention with sliding-window and KV-cache support.
+
+Three entry points:
+
+* ``attend_full``  — training / prefill over a whole sequence. Blockwise
+  online-softmax over KV chunks (flash-attention re-expressed in lax.scan):
+  the (S, S) score matrix never materializes, which is what lets the 32k
+  prefill shapes compile within VMEM/HBM budgets.
+* ``attend_decode`` — one query token against a (possibly ring-buffered)
+  KV cache; the serve_step path.
+* ``Cache`` helpers — allocate / update caches. Sliding-window archs keep a
+  ring buffer of ``window`` entries, which is what makes long_500k decode
+  feasible for them (bounded state; DESIGN.md §4).
+
+Keys are RoPE'd at *write* time with absolute positions, queries at read
+time — the standard cache-friendly formulation.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer.common import apply_rope
+
+
+def _repeat_kv(x: jnp.ndarray, groups: int) -> jnp.ndarray:
+    """(B, S, K, Dh) -> (B, S, K*groups, Dh) by repeating each kv head."""
+    if groups == 1:
+        return x
+    b, s, k, d = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (b, s, k, groups, d)
+                            ).reshape(b, s, k * groups, d)
+
+
+def attend_full(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                *, causal: bool = True, window: Optional[int] = None,
+                q_offset: int = 0, kv_chunk: int = 1024) -> jnp.ndarray:
+    """q: (B, Sq, H, Dh); k, v: (B, Skv, K, Dh) with H % K == 0.
+
+    Returns (B, Sq, H, Dh). Online-softmax over KV chunks; causal and
+    window masks are applied per chunk. ``q_offset`` is the absolute
+    position of q[0] relative to k[0] (prefill continuation).
+
+    Memory discipline (the nemotron-340b fit depends on this): GQA heads
+    are *grouped in the einsum*, never materialized via repeat; q/k/v stay
+    in their storage dtype, with f32 appearing only in the per-chunk score
+    block and the (B, H, Sq, Dh) accumulator.
+    """
+    b, sq, h, dh = q.shape
+    skv, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    scale = dh ** -0.5
+    ck = min(kv_chunk, skv)
+    nck = -(-skv // ck)
+    pad = nck * ck - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    q5 = q.reshape(b, sq, kh, g, dh)
+    kc_all = k.reshape(b, nck, ck, kh, dh)
+    vc_all = v.reshape(b, nck, ck, kh, dh)
+    q_pos = q_offset + jnp.arange(sq)
+
+    def kv_step(carry, inputs):
+        m, l, acc = carry
+        kc, vc, c = inputs                      # (B,ck,K,Dh) ×2, chunk idx
+        kv_pos = c * ck + jnp.arange(ck)
+        s = jnp.einsum("bqkgd,bckd->bkgqc", q5, kc,
+                       preferred_element_type=jnp.float32) * scale
+        mask = kv_pos[None, :] <= (skv - 1)     # padding
+        if causal:
+            mask &= kv_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            mask &= kv_pos[None, :] > q_pos[:, None] - window
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgqc,bckd->bkgqd", p.astype(v.dtype), vc,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    init = (jnp.full((b, kh, g, sq), -jnp.inf),
+            jnp.zeros((b, kh, g, sq)),
+            jnp.zeros((b, kh, g, sq, dh)))
+    (m, l, acc), _ = jax.lax.scan(
+        kv_step, init,
+        (kc_all.transpose(1, 0, 2, 3, 4), vc_all.transpose(1, 0, 2, 3, 4),
+         jnp.arange(nck)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]        # (B,K,G,Sq,Dh)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV cache
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray          # (B, L, K, Dh) — L = min(max_seq, window)
+    v: jnp.ndarray
+    pos: jnp.ndarray        # () int32 — absolute count of tokens written
+
+
+def init_kv_cache(batch: int, max_seq: int, kv_heads: int, head_dim: int,
+                  dtype, window: Optional[int] = None) -> KVCache:
+    length = min(max_seq, window) if window else max_seq
+    return KVCache(
+        k=jnp.zeros((batch, length, kv_heads, head_dim), dtype),
+        v=jnp.zeros((batch, length, kv_heads, head_dim), dtype),
+        pos=jnp.zeros((), jnp.int32))
+
+
+def cache_append(cache: KVCache, k_new: jnp.ndarray, v_new: jnp.ndarray
+                 ) -> KVCache:
+    """Append one token (k_new, v_new: (B, 1, K, Dh)); ring-buffered."""
+    length = cache.k.shape[1]
+    slot = cache.pos % length
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new, slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new, slot, axis=1)
+    return KVCache(k=k, v=v, pos=cache.pos + 1)
+
+
+def attend_decode(q: jnp.ndarray, cache: KVCache, *,
+                  window: Optional[int] = None) -> jnp.ndarray:
+    """q: (B, 1, H, Dh) for the token at absolute position cache.pos - 1
+    (already appended). Attends to every valid cache entry. GQA heads are
+    grouped in the einsum (no repeated-KV materialization — a 12× temp for
+    nemotron's 96q/8kv)."""
+    b, _, h, dh = q.shape
+    length, kh = cache.k.shape[1], cache.k.shape[2]
+    g = h // kh
+    scale = dh ** -0.5
+    q5 = q.reshape(b, kh, g, dh)
+    s = jnp.einsum("bkgd,bckd->bkgc", q5, cache.k,
+                   preferred_element_type=jnp.float32) * scale
+    valid = jnp.arange(length) < cache.pos          # ring: all valid once full
+    s = jnp.where(valid[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgc,bckd->bkgd", p.astype(cache.v.dtype), cache.v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full GQA block (projections + rope + attend)
+# ---------------------------------------------------------------------------
+
+def init_attn(key, cfg, dtype, d_model=None):
+    from repro.models.transformer.common import init_linear
+    D = d_model or cfg.d_model
+    dh, H, K = cfg.hdim, cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": init_linear(ks[0], D, H * dh, dtype, bias=cfg.qkv_bias),
+        "wk": init_linear(ks[1], D, K * dh, dtype, bias=cfg.qkv_bias),
+        "wv": init_linear(ks[2], D, K * dh, dtype, bias=cfg.qkv_bias),
+        "wo": init_linear(ks[3], H * dh, D, dtype),
+    }
+
+
+def attn_forward(p, cfg, x: jnp.ndarray, positions: jnp.ndarray,
+                 window: Optional[int] = None,
+                 kv_chunk: int = 1024) -> jnp.ndarray:
+    """Self-attention over a full sequence (train / prefill)."""
+    from repro.models.transformer.common import linear, shard
+    b, s, _ = x.shape
+    dh, H, K = cfg.hdim, cfg.num_heads, cfg.num_kv_heads
+    q = linear(p["wq"], x).reshape(b, s, H, dh)
+    k = linear(p["wk"], x).reshape(b, s, K, dh)
+    v = linear(p["wv"], x).reshape(b, s, K, dh)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if cfg.kv_tp_repeat > 1:
+        # replicate KV heads so the grouped attention shards cleanly on a
+        # single (K·rep)-sized head axis across TP — §Perf iteration
+        k = _repeat_kv(k, cfg.kv_tp_repeat)
+        v = _repeat_kv(v, cfg.kv_tp_repeat)
+        k = shard(k, "dp", None, "tp", None)
+        v = shard(v, "dp", None, "tp", None)
+        q = shard(q, "dp", None, "tp", None)
+    o = attend_full(q, k, v, causal=True, window=window, kv_chunk=kv_chunk)
+    return linear(p["wo"], o.reshape(b, s, H * dh))
+
+
+def attn_decode(p, cfg, x: jnp.ndarray, cache: KVCache,
+                window: Optional[int] = None) -> tuple[jnp.ndarray, KVCache]:
+    """x: (B, 1, D) single token; returns (out (B,1,D), updated cache)."""
+    from repro.models.transformer.common import linear
+    b = x.shape[0]
+    dh, H, K = cfg.hdim, cfg.num_heads, cfg.num_kv_heads
+    pos = cache.pos[None]                           # absolute position
+    q = linear(p["wq"], x).reshape(b, 1, H, dh)
+    k = linear(p["wk"], x).reshape(b, 1, K, dh)
+    v = linear(p["wv"], x).reshape(b, 1, K, dh)
+    q = apply_rope(q, jnp.broadcast_to(pos, (b, 1)), cfg.rope_theta)
+    k = apply_rope(k, jnp.broadcast_to(pos, (b, 1)), cfg.rope_theta)
+    cache = cache_append(cache, k, v)
+    o = attend_decode(q, cache, window=window)
+    return linear(p["wo"], o.reshape(b, 1, H * dh)), cache

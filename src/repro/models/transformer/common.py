@@ -1,0 +1,126 @@
+"""Shared transformer building blocks: norms, RoPE, inits, sharding hints.
+
+All parameters are plain dict pytrees (no flax): every leaf is created by an
+``init_*`` helper and consumed by a pure ``apply`` function, so GSPMD
+sharding is controlled entirely by ``in_shardings`` on the jitted step plus
+``with_sharding_constraint`` hints at block boundaries.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def he_normal(key, shape, dtype, fan_in=None):
+    fan = fan_in if fan_in is not None else shape[0]
+    return (jax.random.normal(key, shape) * (2.0 / fan) ** 0.5).astype(dtype)
+
+
+def init_linear(key, d_in, d_out, dtype, bias=False):
+    p = {"w": he_normal(key, (d_in, d_out), dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def init_rmsnorm(d, dtype):
+    return {"g": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * p["g"]
+
+
+def init_layernorm(d, dtype):
+    return {"g": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(-1, keepdims=True)
+    var = x32.var(-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * p["g"] + p["b"]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                        # (Dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., S, Dh/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., : dh // 2], x[..., dh // 2:]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin], -1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Sharding hints
+# ---------------------------------------------------------------------------
+
+# Logical→mesh axis mapping. The launcher rebinds "dp" to ("pod", "data")
+# for the multi-pod mesh; models only ever name logical axes.
+_MESH_AXES = {"dp": ("data",), "tp": ("model",)}
+
+
+def set_mesh_axes(dp, tp) -> None:
+    _MESH_AXES["dp"] = tuple(dp) if isinstance(dp, (tuple, list)) else (dp,)
+    _MESH_AXES["tp"] = tuple(tp) if isinstance(tp, (tuple, list)) else (tp,)
+
+
+def resolve_axes(name):
+    if name == "dp":
+        return _MESH_AXES["dp"]
+    if name == "tp":
+        ax = _MESH_AXES["tp"]
+        return ax[0] if len(ax) == 1 else ax
+    return name
+
+
+def shard(x, *spec):
+    """Best-effort with_sharding_constraint with logical axis names
+    ("dp"/"tp"); no-op outside a mesh context (CPU unit tests)."""
+    resolved = tuple(resolve_axes(s) if isinstance(s, str) else
+                     (tuple(resolve_axes(a) for a in s)
+                      if isinstance(s, (tuple, list)) else s)
+                     for s in spec)
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*resolved))
+    except (ValueError, RuntimeError, TypeError, KeyError):
+        return x
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean next-token NLL; logits (B,S,V) f32-upcast, labels (B,S) int32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        m = mask.astype(jnp.float32)
+        return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return nll.mean()

@@ -1,0 +1,36 @@
+"""Feed-forward variants used across the assigned architectures.
+
+* ``swiglu``  — llama/mistral/qwen family: silu(x W_g) ⊙ (x W_u) W_d.
+* ``sqrelu``  — nemotron-4: relu(x W_u)² W_d (squared-ReLU, 2 matrices).
+* ``gelu``    — whisper/ViT classic: gelu(x W_u) W_d.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer.common import init_linear, linear
+
+
+def init_mlp(key, d_model: int, d_ff: int, kind: str, dtype):
+    ks = jax.random.split(key, 3)
+    if kind == "swiglu":
+        return {"wg": init_linear(ks[0], d_model, d_ff, dtype),
+                "wu": init_linear(ks[1], d_model, d_ff, dtype),
+                "wd": init_linear(ks[2], d_ff, d_model, dtype)}
+    if kind in ("sqrelu", "gelu"):
+        return {"wu": init_linear(ks[0], d_model, d_ff, dtype),
+                "wd": init_linear(ks[1], d_ff, d_model, dtype)}
+    raise ValueError(kind)
+
+
+def mlp_forward(p, x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    if kind == "swiglu":
+        return linear(p["wd"], jax.nn.silu(linear(p["wg"], x))
+                      * linear(p["wu"], x))
+    if kind == "sqrelu":
+        h = jax.nn.relu(linear(p["wu"], x))
+        return linear(p["wd"], jnp.square(h))
+    if kind == "gelu":
+        return linear(p["wd"], jax.nn.gelu(linear(p["wu"], x)))
+    raise ValueError(kind)

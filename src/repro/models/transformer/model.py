@@ -1,0 +1,648 @@
+"""Unified model assembly for every assigned architecture family.
+
+One functional API over plain-dict params:
+
+  * ``init_params(key, cfg)``            — pure (traceable via eval_shape)
+  * ``forward(params, cfg, batch)``      — train/prefill logits (+ aux)
+  * ``loss_fn(params, cfg, batch)``      — next-token CE (+ MoE aux)
+  * ``init_decode_state(cfg, batch, max_seq)`` — per-family cache pytree
+  * ``decode_step(params, cfg, token, state)`` — one-token serve step
+
+Layers are *scanned* over stacked parameters (HLO size O(1) in depth —
+a 96-layer nemotron lowers like a 1-layer model plus a loop), with
+``jax.checkpoint`` on the per-layer body for activation remat. Hybrid
+architectures scan over pattern *groups* (e.g. (rec, rec, attn)) plus an
+explicit tail when depth isn't a multiple of the period.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer.attention import (
+    KVCache, attn_decode, attn_forward, init_attn, init_kv_cache)
+from repro.models.transformer.common import (
+    cross_entropy, init_linear, init_rmsnorm, linear, rmsnorm, shard)
+from repro.models.transformer.config import ArchConfig
+from repro.models.transformer.mlp import init_mlp, mlp_forward
+from repro.models.transformer.moe import init_moe, moe_forward
+from repro.models.transformer import encdec
+from repro.models.transformer.rglru import (
+    RGLRUState, init_rglru_block, init_rglru_state, rglru_block,
+    rglru_block_decode)
+from repro.models.transformer.rwkv6 import (
+    RWKVState, init_rwkv_block, rwkv_block, rwkv_block_decode)
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+# Scan unroll factor. XLA's HloCostAnalysis counts a while-loop body ONCE
+# regardless of trip count; the dry-run lowers each program twice (unroll=1
+# and unroll=2) and extrapolates true FLOPs/bytes as f1 + (L-1)·(f2-f1).
+_SCAN_UNROLL = [1]
+
+# Sequence parallelism (Korthikanti et al.): shard the residual stream's
+# *sequence* dim over the model axis at layer-scan boundaries. The scan's
+# saved-carry stack (L, B, S, D) — the dominant training temp — then shards
+# 16× over tp; GSPMD inserts the gather before attention, exactly the
+# sequence-parallel collective schedule. Toggleable for §Perf A/B runs.
+_SEQ_SHARD = [True]
+
+
+def set_sequence_sharding(on: bool) -> None:
+    _SEQ_SHARD[0] = bool(on)
+
+
+def _carry_shard(x):
+    if _SEQ_SHARD[0]:
+        return shard(x, "dp", "tp", None)
+    return shard(x, "dp", None, None)
+
+
+def set_scan_unroll(k: int) -> None:
+    _SCAN_UNROLL[0] = int(k)
+
+
+# Remat policy for the per-layer checkpoint. "full" recomputes everything
+# (min memory, but collectives inside the layer fire twice — fwd and
+# recompute); "dots" saves matmul outputs, so the backward pass reuses them
+# and cross-shard partial-sum reductions run once (§Perf lever).
+_REMAT_POLICY = ["full"]
+
+
+def set_remat_policy(name: str) -> None:
+    assert name in ("full", "dots"), name
+    _REMAT_POLICY[0] = name
+
+
+def _ckpt(fn):
+    if _REMAT_POLICY[0] == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def _scan(body, init, xs):
+    return jax.lax.scan(body, init, xs, unroll=_SCAN_UNROLL[0])
+
+
+def scan_length(cfg: ArchConfig) -> int:
+    """Trip count of the layer scan(s) — the dry-run's extrapolation L.
+    (For audio, encoder and decoder scans share the same length.)"""
+    if cfg.family == "hybrid":
+        return cfg.num_layers // len(tuple(cfg.block_pattern))
+    if cfg.family == "audio":
+        assert cfg.encoder_layers == cfg.num_layers
+        return cfg.num_layers
+    return cfg.num_layers
+
+
+# ===========================================================================
+# init
+# ===========================================================================
+
+def _init_dense_layer(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": init_rmsnorm(cfg.d_model, dtype),
+         "attn": init_attn(k1, cfg, dtype),
+         "ln2": init_rmsnorm(cfg.d_model, dtype)}
+    if cfg.moe_num_experts:
+        p["moe"] = init_moe(k2, cfg, dtype)
+    else:
+        p["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.mlp, dtype)
+    return p
+
+
+def _init_rwkv_layer(key, cfg, dtype):
+    return {"ln1": init_rmsnorm(cfg.d_model, dtype),
+            "ln2": init_rmsnorm(cfg.d_model, dtype),
+            "blk": init_rwkv_block(key, cfg, dtype)}
+
+
+def _init_hybrid_position(key, cfg, dtype, kind: str):
+    k1, k2 = jax.random.split(key)
+    if kind == "rec":
+        p = {"ln1": init_rmsnorm(cfg.d_model, dtype),
+             "blk": init_rglru_block(k1, cfg, dtype)}
+    else:
+        p = {"ln1": init_rmsnorm(cfg.d_model, dtype),
+             "attn": init_attn(k1, cfg, dtype)}
+    p["ln2"] = init_rmsnorm(cfg.d_model, dtype)
+    p["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.mlp, dtype)
+    return p
+
+
+def init_params(key, cfg: ArchConfig):
+    dtype = cfg.activation_dtype
+    D, V = cfg.d_model, cfg.padded_vocab
+    keys = jax.random.split(key, cfg.num_layers + 8)
+    p: dict[str, Any] = {
+        "embed": (jax.random.normal(keys[-1], (V, D)) * 0.02).astype(dtype),
+        "norm_f": init_rmsnorm(D, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = (jax.random.normal(keys[-2], (D, V)) * 0.02).astype(dtype)
+
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        p["layers"] = _stack([_init_dense_layer(keys[i], cfg, dtype)
+                              for i in range(cfg.num_layers)])
+        if fam == "vlm":
+            p["patch_proj"] = init_linear(keys[-3], cfg.patch_dim, D, dtype)
+    elif fam == "ssm":
+        p["layers"] = _stack([_init_rwkv_layer(keys[i], cfg, dtype)
+                              for i in range(cfg.num_layers)])
+    elif fam == "hybrid":
+        pat = tuple(cfg.block_pattern)
+        period = len(pat)
+        n_groups = cfg.num_layers // period
+        rem = cfg.num_layers - n_groups * period
+        groups = []
+        ki = 0
+        for g in range(n_groups):
+            grp = [_init_hybrid_position(keys[ki + j], cfg, dtype, pat[j])
+                   for j in range(period)]
+            ki += period
+            groups.append({"blocks": tuple(grp)})
+        p["groups"] = _stack(groups)
+        p["tail"] = [
+            _init_hybrid_position(keys[ki + j], cfg, dtype, pat[j % period])
+            for j in range(rem)]
+    elif fam == "audio":
+        De = cfg.encoder_d_model or D
+        ek = jax.random.split(keys[-4], cfg.encoder_layers)
+        dk = jax.random.split(keys[-5], cfg.num_layers)
+        p["enc_pos"] = (jax.random.normal(keys[-6], (cfg.encoder_seq, De))
+                        * 0.02).astype(dtype)
+        p["enc_layers"] = _stack([
+            encdec.init_encoder_layer(ek[i], De, cfg.num_heads, De * 4, dtype)
+            for i in range(cfg.encoder_layers)])
+        p["enc_ln_f"] = init_rmsnorm(De, dtype)
+        p["dec_layers"] = _stack([
+            encdec.init_decoder_layer(dk[i], D, cfg.num_heads, cfg.d_ff,
+                                      dtype)
+            for i in range(cfg.num_layers)])
+    else:
+        raise ValueError(fam)
+    return p
+
+
+# ===========================================================================
+# layer bodies
+# ===========================================================================
+
+def _dense_layer_fwd(layer_p, cfg, x, positions):
+    h = rmsnorm(layer_p["ln1"], x)
+    x = x + attn_forward(layer_p["attn"], cfg, h, positions,
+                         window=cfg.swa_window)
+    x = shard(x, "dp", None, None)
+    h = rmsnorm(layer_p["ln2"], x)
+    if cfg.moe_num_experts:
+        y, stats = moe_forward(layer_p["moe"], cfg, h)
+        return x + y, stats.aux_loss
+    return x + mlp_forward(layer_p["mlp"], h, cfg.mlp), jnp.zeros(())
+
+
+def _hybrid_position_fwd(pos_p, cfg, x, positions, kind: str):
+    if kind == "rec":
+        x = rglru_block(pos_p["blk"], cfg, x, pos_p["ln1"])
+    else:
+        h = rmsnorm(pos_p["ln1"], x)
+        x = x + attn_forward(pos_p["attn"], cfg, h, positions,
+                             window=cfg.local_attn_window)
+    h = rmsnorm(pos_p["ln2"], x)
+    return x + mlp_forward(pos_p["mlp"], h, cfg.mlp)
+
+
+# ===========================================================================
+# forward (train / prefill logits)
+# ===========================================================================
+
+def forward_hidden(params, cfg: ArchConfig, batch: dict
+                   ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Backbone only: returns (final-normed hidden (B, S, D), aux_loss).
+
+    batch keys by family:
+      dense/moe/ssm/hybrid: tokens (B, S)
+      vlm:   tokens (B, S_text), patches (B, P, patch_dim); S = P + S_text
+      audio: tokens (B, S_dec), frames (B, S_enc, De)
+    """
+    fam = cfg.family
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if fam == "vlm":
+        pe = linear(params["patch_proj"], batch["patches"])
+        x = jnp.concatenate([pe.astype(x.dtype), x], axis=1)
+    x = shard(x, "dp", None, None)
+    B, S, D = x.shape
+    positions = jnp.arange(S)
+
+    aux = jnp.zeros(())
+    if fam in ("dense", "moe", "vlm"):
+        def body(carry, layer_p):
+            x, aux = carry
+            x, a = _dense_layer_fwd(layer_p, cfg, x, positions)
+            return (_carry_shard(x), aux + a), None
+        (x, aux), _ = _scan(_ckpt(body), (x, aux),
+                            params["layers"])
+    elif fam == "ssm":
+        def body(carry, layer_p):
+            x = rwkv_block(layer_p["blk"], cfg, carry,
+                           (layer_p["ln1"], layer_p["ln2"]))
+            return _carry_shard(x), None
+        x, _ = _scan(_ckpt(body), x, params["layers"])
+    elif fam == "hybrid":
+        period = len(tuple(cfg.block_pattern))
+
+        pat = tuple(cfg.block_pattern)
+
+        def body(x, grp):
+            for j in range(period):
+                x = _hybrid_position_fwd(grp["blocks"][j], cfg, x, positions,
+                                         pat[j])
+            return _carry_shard(x), None
+        x, _ = _scan(_ckpt(body), x, params["groups"])
+        for j, pos_p in enumerate(params["tail"]):
+            x = _hybrid_position_fwd(pos_p, cfg, x, positions,
+                                     pat[j % period])
+    elif fam == "audio":
+        De = cfg.encoder_d_model or D
+        enc = batch["frames"].astype(x.dtype) + params["enc_pos"]
+
+        def ebody(e, layer_p):
+            return _carry_shard(
+                encdec.encoder_layer(layer_p, e, cfg.num_heads)), None
+        enc, _ = _scan(_ckpt(ebody), enc, params["enc_layers"])
+        enc = rmsnorm(params["enc_ln_f"], enc)
+
+        def dbody(x, layer_p):
+            return _carry_shard(
+                encdec.decoder_layer(layer_p, x, enc, cfg.num_heads)), None
+        x, _ = _scan(_ckpt(dbody), x, params["dec_layers"])
+    else:
+        raise ValueError(fam)
+
+    return rmsnorm(params["norm_f"], x), aux
+
+
+def _head_matrix(params):
+    head = params.get("head")
+    return head if head is not None else params["embed"].T
+
+
+def forward(params, cfg: ArchConfig, batch: dict) -> tuple[jnp.ndarray,
+                                                           jnp.ndarray]:
+    """Full logits (B, S, V_padded) — serving/debug path. Training goes
+    through ``loss_fn`` (chunked CE; full-sequence f32 logits never
+    materialize)."""
+    x, aux = forward_hidden(params, cfg, batch)
+    logits = x @ _head_matrix(params)
+    return shard(logits, "dp", None, "tp"), aux
+
+
+def _labels_and_mask(cfg: ArchConfig, batch: dict, S: int):
+    """Next-token labels aligned to hidden positions, with a validity mask.
+    For VLM, position p ≥ P-1 predicts text token p-(P-1); the patch prefix
+    itself is unsupervised."""
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    if cfg.family == "vlm":
+        P = batch["patches"].shape[1]
+        s_text = tokens.shape[1]
+        idx = jnp.arange(S) - (P - 1)
+        valid = (idx >= 0) & (idx < s_text)
+        labels = jnp.take(tokens, jnp.clip(idx, 0, s_text - 1), axis=1)
+        mask = jnp.broadcast_to(valid[None], (B, S))
+        # last position has no next token
+        mask = mask & (jnp.arange(S) < S - 1)[None]
+        return labels, mask
+    labels = jnp.concatenate(
+        [tokens[:, 1:], jnp.zeros((B, 1), tokens.dtype)], axis=1)
+    mask = jnp.broadcast_to((jnp.arange(S) < S - 1)[None], (B, S))
+    return labels, mask
+
+
+def chunked_ce(params, x: jnp.ndarray, labels: jnp.ndarray,
+               mask: jnp.ndarray, chunk: int = 512) -> jnp.ndarray:
+    """Cross-entropy scanned over sequence chunks with remat: the (B, S, V)
+    f32 logits tensor never exists — per chunk only (B, C, V) does. This is
+    what lets the 256k-vocab configs train within HBM."""
+    W = _head_matrix(params)
+    B, S, D = x.shape
+    C = min(chunk, S)
+    pad = (-S) % C
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    nc = x.shape[1] // C
+
+    def body(carry, xs):
+        s_nll, s_cnt = carry
+        xc, lc, mc = xs                             # (B,C,D), (B,C), (B,C)
+        logits = (xc @ W).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None].astype(jnp.int32),
+                                   axis=-1)[..., 0]
+        m = mc.astype(jnp.float32)
+        return (s_nll + jnp.sum((logz - gold) * m), s_cnt + jnp.sum(m)), None
+
+    xs = (x.reshape(B, nc, C, D).transpose(1, 0, 2, 3),
+          labels.reshape(B, nc, C).transpose(1, 0, 2),
+          mask.reshape(B, nc, C).transpose(1, 0, 2))
+    (s_nll, s_cnt), _ = jax.lax.scan(
+        _ckpt(body), (jnp.zeros(()), jnp.zeros(())), xs)
+    return s_nll / jnp.maximum(s_cnt, 1.0)
+
+
+def loss_fn(params, cfg: ArchConfig, batch: dict,
+            aux_weight: float = 0.01) -> tuple[jnp.ndarray, dict]:
+    x, aux = forward_hidden(params, cfg, batch)
+    labels, mask = _labels_and_mask(cfg, batch, x.shape[1])
+    ce = chunked_ce(params, x, labels, mask)
+    total = ce + aux_weight * aux
+    return total, {"ce": ce, "aux": aux}
+
+
+# ===========================================================================
+# decode
+# ===========================================================================
+
+class DecodeState(NamedTuple):
+    caches: Any             # per-family stacked cache pytree
+    tail: Any               # hybrid tail caches (list) or None
+    enc: Any                # audio: encoder output; vlm/dense: None
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, max_seq: int,
+                      enc: Optional[jnp.ndarray] = None,
+                      params=None) -> DecodeState:
+    dtype = cfg.activation_dtype
+    fam = cfg.family
+    L = cfg.num_layers
+    if fam in ("dense", "moe", "vlm"):
+        def one():
+            return init_kv_cache(batch, max_seq, cfg.num_kv_heads, cfg.hdim,
+                                 dtype, window=cfg.swa_window)
+        caches = _stack([one() for _ in range(L)])
+        return DecodeState(caches=caches, tail=None, enc=None)
+    if fam == "ssm":
+        hd = cfg.rwkv_head_dim
+        H = cfg.d_model // hd
+
+        def one():
+            return RWKVState(s=jnp.zeros((batch, H, hd, hd), jnp.float32),
+                             tm_x=jnp.zeros((batch, cfg.d_model), dtype),
+                             cm_x=jnp.zeros((batch, cfg.d_model), dtype))
+        return DecodeState(caches=_stack([one() for _ in range(L)]),
+                           tail=None, enc=None)
+    if fam == "hybrid":
+        pat = tuple(cfg.block_pattern)
+        period = len(pat)
+        n_groups = L // period
+        rem = L - n_groups * period
+
+        def pos_cache(kind):
+            if kind == "rec":
+                return init_rglru_state(batch, cfg)
+            return init_kv_cache(batch, max_seq, cfg.num_kv_heads, cfg.hdim,
+                                 dtype, window=cfg.local_attn_window)
+        groups = _stack([
+            {"blocks": tuple(pos_cache(pat[j]) for j in range(period))}
+            for _ in range(n_groups)])
+        tail = [pos_cache(pat[j % period]) for j in range(rem)]
+        return DecodeState(caches=groups, tail=tail, enc=None)
+    if fam == "audio":
+        assert enc is not None and params is not None
+        dec = [encdec.init_decoder_cache(
+            jax.tree.map(lambda t: t[i], params["dec_layers"]), enc, batch,
+            max_seq, cfg.num_heads, cfg.d_model, dtype)
+            for i in range(L)]
+        return DecodeState(caches=_stack(dec), tail=None, enc=enc)
+    raise ValueError(fam)
+
+
+def decode_step(params, cfg: ArchConfig, token: jnp.ndarray,
+                state: DecodeState) -> tuple[jnp.ndarray, DecodeState]:
+    """token: (B,) int32 — returns (logits (B, V), new state)."""
+    fam = cfg.family
+    x = jnp.take(params["embed"], token[:, None], axis=0)   # (B, 1, D)
+
+    if fam in ("dense", "moe", "vlm"):
+        def body(x, xs):
+            layer_p, cache = xs
+            h = rmsnorm(layer_p["ln1"], x)
+            a, cache = attn_decode(layer_p["attn"], cfg, h, cache,
+                                   window=cfg.swa_window)
+            x = x + a
+            h = rmsnorm(layer_p["ln2"], x)
+            if cfg.moe_num_experts:
+                y, _ = moe_forward(layer_p["moe"], cfg, h)
+                x = x + y
+            else:
+                x = x + mlp_forward(layer_p["mlp"], h, cfg.mlp)
+            return x, cache
+        x, caches = _scan(body, x, (params["layers"], state.caches))
+        state = state._replace(caches=caches)
+    elif fam == "ssm":
+        def body(x, xs):
+            layer_p, st = xs
+            x, st = rwkv_block_decode(layer_p["blk"], cfg, x,
+                                      (layer_p["ln1"], layer_p["ln2"]), st)
+            return x, st
+        x, caches = _scan(body, x, (params["layers"], state.caches))
+        state = state._replace(caches=caches)
+    elif fam == "hybrid":
+        period = len(tuple(cfg.block_pattern))
+
+        pat = tuple(cfg.block_pattern)
+
+        def body(x, xs):
+            grp_p, grp_c = xs
+            new_c = []
+            for j in range(period):
+                x, pos_c = _hybrid_position_decode(
+                    grp_p["blocks"][j], cfg, x, grp_c["blocks"][j], pat[j])
+                new_c.append(pos_c)
+            return x, {"blocks": tuple(new_c)}
+        x, caches = _scan(body, x, (params["groups"], state.caches))
+        new_tail = []
+        for j, (pos_p, pos_c) in enumerate(zip(params["tail"], state.tail)):
+            x, pos_c = _hybrid_position_decode(pos_p, cfg, x, pos_c,
+                                               pat[j % period])
+            new_tail.append(pos_c)
+        state = state._replace(caches=caches, tail=new_tail)
+    elif fam == "audio":
+        def body(x, xs):
+            layer_p, cache = xs
+            x, cache = encdec.decoder_layer_decode(layer_p, x, cache,
+                                                   cfg.num_heads)
+            return x, cache
+        x, caches = _scan(body, x, (params["dec_layers"], state.caches))
+        state = state._replace(caches=caches)
+    else:
+        raise ValueError(fam)
+
+    x = rmsnorm(params["norm_f"], x)
+    head = params.get("head")
+    logits = (x @ (head if head is not None else params["embed"].T))[:, 0]
+    return logits, state
+
+
+def _hybrid_position_decode(pos_p, cfg, x, pos_c, kind: str):
+    if kind == "rec":
+        x, pos_c = rglru_block_decode(pos_p["blk"], cfg, x, pos_p["ln1"],
+                                      pos_c)
+    else:
+        h = rmsnorm(pos_p["ln1"], x)
+        a, pos_c = attn_decode(pos_p["attn"], cfg, h, pos_c,
+                               window=cfg.local_attn_window)
+        x = x + a
+    h = rmsnorm(pos_p["ln2"], x)
+    return x + mlp_forward(pos_p["mlp"], h, cfg.mlp), pos_c
+
+
+# ===========================================================================
+# prefill (forward + cache materialization for serving)
+# ===========================================================================
+
+def prefill(params, cfg: ArchConfig, batch: dict, max_seq: int
+            ) -> tuple[jnp.ndarray, DecodeState]:
+    """Run the prompt through the model, returning last-token logits and a
+    decode-ready state. Dense/moe/vlm recompute K/V per layer (cheap relative
+    to attention itself); ssm/hybrid prefill via their sequence paths."""
+    fam = cfg.family
+    if fam == "audio":
+        # encoder once; decoder pass fills the self-attn caches (the decode
+        # path must see the prompt's K/V — not a fresh cache)
+        B = batch["tokens"].shape[0]
+        enc = batch["frames"].astype(cfg.activation_dtype) + params["enc_pos"]
+
+        def ebody(e, layer_p):
+            return encdec.encoder_layer(layer_p, e, cfg.num_heads), None
+        enc, _ = _scan(ebody, enc, params["enc_layers"])
+        enc = rmsnorm(params["enc_ln_f"], enc)
+        state = init_decode_state(cfg, B, max_seq, enc=enc, params=params)
+
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        s_len = x.shape[1]
+
+        def dbody(x, xs):
+            layer_p, cache = xs
+            from repro.models.transformer.common import layernorm
+            h = layernorm(layer_p["ln1"], x)
+            dh = cfg.d_model // cfg.num_heads
+            k = linear(layer_p["self_attn"]["wk"], h).reshape(
+                B, s_len, cfg.num_heads, dh)
+            v = linear(layer_p["self_attn"]["wv"], h).reshape(
+                B, s_len, cfg.num_heads, dh)
+            length = cache.self_kv.k.shape[1]
+            k_new = jax.lax.dynamic_update_slice_in_dim(
+                cache.self_kv.k, k[:, :length], 0, axis=1)
+            v_new = jax.lax.dynamic_update_slice_in_dim(
+                cache.self_kv.v, v[:, :length], 0, axis=1)
+            new_cache = cache._replace(self_kv=KVCache(
+                k=k_new, v=v_new, pos=jnp.asarray(s_len, jnp.int32)))
+            x = encdec.decoder_layer(layer_p, x, enc, cfg.num_heads)
+            return x, new_cache
+        x, caches = _scan(dbody, x, (params["dec_layers"], state.caches))
+        state = state._replace(caches=caches)
+        x = rmsnorm(params["norm_f"], x)
+        return x[:, -1] @ _head_matrix(params), state
+
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+
+    if fam in ("ssm", "hybrid"):
+        # stateful prefill: thread the recurrent/window state through the
+        # sequence pass so decode continues from the prompt
+        x = jnp.take(params["embed"], tokens, axis=0)
+        positions = jnp.arange(x.shape[1])
+        if fam == "ssm":
+            def body(x, layer_p):
+                x, st = rwkv_block(layer_p["blk"], cfg, x,
+                                   (layer_p["ln1"], layer_p["ln2"]),
+                                   return_state=True)
+                return x, st
+            x, states = _scan(body, x, params["layers"])
+            state = DecodeState(caches=states, tail=None, enc=None)
+        else:
+            pat = tuple(cfg.block_pattern)
+            period = len(pat)
+
+            def pos_prefill(pos_p, x, kind):
+                if kind == "rec":
+                    x2, st = rglru_block(pos_p["blk"], cfg, x,
+                                         pos_p["ln1"], return_state=True)
+                else:
+                    h = rmsnorm(pos_p["ln1"], x)
+                    cache = init_kv_cache(B, max_seq, cfg.num_kv_heads,
+                                          cfg.hdim, cfg.activation_dtype,
+                                          window=cfg.local_attn_window)
+                    st = _prefill_kv(pos_p["attn"], cfg, h, positions,
+                                     cache)
+                    x2 = x + attn_forward(pos_p["attn"], cfg, h, positions,
+                                          window=cfg.local_attn_window)
+                h = rmsnorm(pos_p["ln2"], x2)
+                return x2 + mlp_forward(pos_p["mlp"], h, cfg.mlp), st
+
+            def gbody(x, grp):
+                sts = []
+                for j in range(period):
+                    x, st = pos_prefill(grp["blocks"][j], x, pat[j])
+                    sts.append(st)
+                return x, {"blocks": tuple(sts)}
+            x, gcaches = _scan(gbody, x, params["groups"])
+            tail_sts = []
+            for j, pos_p in enumerate(params["tail"]):
+                x, st = pos_prefill(pos_p, x, pat[j % period])
+                tail_sts.append(st)
+            state = DecodeState(caches=gcaches, tail=tail_sts, enc=None)
+        x = rmsnorm(params["norm_f"], x)
+        return x[:, -1] @ _head_matrix(params), state
+
+    x_h, _ = forward_hidden(params, cfg, batch)
+    last_logits = x_h[:, -1] @ _head_matrix(params)
+    state = init_decode_state(cfg, B, max_seq)
+
+    if fam in ("dense", "moe", "vlm"):
+        x = jnp.take(params["embed"], tokens, axis=0)
+        if fam == "vlm":
+            pe = linear(params["patch_proj"], batch["patches"])
+            x = jnp.concatenate([pe.astype(x.dtype), x], axis=1)
+        S = x.shape[1]
+        positions = jnp.arange(S)
+
+        def body(x, xs):
+            layer_p, cache = xs
+            h = rmsnorm(layer_p["ln1"], x)
+            cache = _prefill_kv(layer_p["attn"], cfg, h, positions, cache)
+            x, _ = _dense_layer_fwd(layer_p, cfg, x, positions)
+            return x, cache
+        _, caches = _scan(body, x, (params["layers"], state.caches))
+        state = state._replace(caches=caches)
+    return last_logits, state
+
+
+def _prefill_kv(attn_p, cfg, h, positions, cache: KVCache) -> KVCache:
+    from repro.models.transformer.common import linear as _lin
+    from repro.models.transformer.common import apply_rope
+    b, s, _ = h.shape
+    K, dh = cfg.num_kv_heads, cfg.hdim
+    k = _lin(attn_p["wk"], h).reshape(b, s, K, dh)
+    v = _lin(attn_p["wv"], h).reshape(b, s, K, dh)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    length = cache.k.shape[1]
+    if s >= length:
+        # ring-buffer layout: position p lives at slot p % length
+        k_keep = jnp.roll(k[:, -length:], s % length, axis=1)
+        v_keep = jnp.roll(v[:, -length:], s % length, axis=1)
+        return KVCache(k=k_keep, v=v_keep,
+                       pos=jnp.asarray(s, jnp.int32))
+    k_new = jax.lax.dynamic_update_slice_in_dim(cache.k, k, 0, axis=1)
+    v_new = jax.lax.dynamic_update_slice_in_dim(cache.v, v, 0, axis=1)
+    return KVCache(k=k_new, v=v_new, pos=jnp.asarray(s, jnp.int32))

@@ -1,0 +1,153 @@
+"""Mixture-of-experts layer (qwen2-moe, deepseek-moe) with HopMoE dispatch.
+
+Routing is GShard-style capacity-based dispatch, computed *per batch row* so
+every cumsum/scatter stays local to the row's data shard (no cross-device
+sequential ops). Expert compute is one stacked einsum over (E, C, D) buffers
+— real FLOPs proportional to capacity, not to E (no masked-matmul padding
+waste beyond the capacity factor).
+
+**HopMoE (beyond-paper, DESIGN.md §4):** the paper's feature-centric
+principle — "move the small thing to the big thing" — applied to the one
+place in these architectures with the same structure. Two shardings of the
+same math:
+
+* ``tokens``  (model-centric analogue): routed expert weights sharded over
+  the ``model`` axis on the *expert* dim; token buffers must be laid out
+  expert-major, so GSPMD inserts an all-to-all moving activation bytes.
+* ``weights`` (feature-centric analogue): expert weights sharded on the
+  *hidden* (d_ff) dim; tokens never leave their data shard — the *weights*
+  are what's distributed. Costs an extra all-reduce of the expert output
+  partial sums on the model axis.
+
+``auto`` computes the paper's α ratio per layer —
+α = dispatched-activation-bytes / expert-weight-bytes — and picks the
+cheaper side at trace time (shapes are static, so this is a free decision).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer.common import init_linear, shard
+
+
+def moe_capacity(seq: int, top_k: int, num_experts: int,
+                 capacity_factor: float, multiple: int = 8) -> int:
+    # decode (seq == 1): each expert serves at most 1 token per row — the
+    # 8-multiple padding would make every expert buffer 8× oversized (the
+    # baseline roofline's useful_ratio ≈ 0.02 for MoE decode; §Perf)
+    if seq == 1:
+        return 1
+    c = int(seq * top_k / num_experts * capacity_factor) + 1
+    return max(multiple, -(-c // multiple) * multiple)
+
+
+def init_moe(key, cfg, dtype):
+    D, E, Fe = cfg.d_model, cfg.moe_num_experts, cfg.moe_expert_d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": init_linear(ks[0], D, E, jnp.float32),
+        "wg": (jax.random.normal(ks[1], (E, D, Fe)) * (2.0 / D) ** 0.5
+               ).astype(dtype),
+        "wu": (jax.random.normal(ks[2], (E, D, Fe)) * (2.0 / D) ** 0.5
+               ).astype(dtype),
+        "wd": (jax.random.normal(ks[3], (E, Fe, D)) * (2.0 / Fe) ** 0.5
+               ).astype(dtype),
+    }
+    if cfg.moe_num_shared:
+        from repro.models.transformer.mlp import init_mlp
+        p["shared"] = init_mlp(ks[4], D, cfg.moe_num_shared * Fe,
+                               "swiglu", dtype)
+    return p
+
+
+@dataclasses.dataclass
+class MoEStats:
+    aux_loss: jnp.ndarray
+    dispatch_bytes: int
+    weight_bytes: int
+    mode: str
+
+
+def _alpha_mode(cfg, batch: int, seq: int) -> tuple[str, int, int]:
+    """HopMoE α decision: compare bytes that must cross the model axis."""
+    D, E, Fe = cfg.d_model, cfg.moe_num_experts, cfg.moe_expert_d_ff
+    itemsize = 2 if cfg.dtype == "bfloat16" else 4
+    C = moe_capacity(seq, cfg.moe_top_k, E, cfg.moe_capacity_factor)
+    # tokens mode: buffers (B,E,C,D) cross model axis out and back (×2)
+    dispatch_bytes = 2 * batch * E * C * D * itemsize
+    # weights mode: partial-sum all-reduce of the output (B,S,D) on model axis
+    weight_bytes = 2 * batch * seq * D * 4   # f32 partials
+    mode = cfg.moe_dispatch
+    if mode == "auto":
+        mode = "tokens" if dispatch_bytes < weight_bytes else "weights"
+    return mode, dispatch_bytes, weight_bytes
+
+
+def moe_forward(p, cfg, x: jnp.ndarray) -> tuple[jnp.ndarray, MoEStats]:
+    """x: (B, S, D). Returns (out (B,S,D), stats with aux loss)."""
+    B, S, D = x.shape
+    E, k = cfg.moe_num_experts, cfg.moe_top_k
+    Fe = cfg.moe_expert_d_ff
+    C = moe_capacity(S, k, E, cfg.moe_capacity_factor)
+    mode, db, wb = _alpha_mode(cfg, B, S)
+
+    logits = (x.astype(jnp.float32) @ p["router"]["w"])        # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                     # (B,S,k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # --- aux load-balance loss (Switch): E * Σ_e f_e · m_e ---
+    me = probs.mean(axis=(0, 1))                               # (E,)
+    fe = jax.nn.one_hot(top_e[..., 0], E).mean(axis=(0, 1))
+    aux = E * jnp.sum(fe * me)
+
+    # --- per-row capacity dispatch ---
+    eid = top_e.reshape(B, S * k)                              # (B, N)
+    onehot = jax.nn.one_hot(eid, E, dtype=jnp.int32)           # (B, N, E)
+    pos = jnp.cumsum(onehot, axis=1) - 1                       # (B, N, E)
+    my_pos = jnp.take_along_axis(pos, eid[..., None], 2)[..., 0]   # (B, N)
+    keep = my_pos < C
+    slot = jnp.where(keep, eid * C + my_pos, E * C)            # drop → spill row
+    x_rep = jnp.repeat(x, k, axis=1)                           # (B, N, D)
+    gate = (top_p.reshape(B, S * k) * keep).astype(x.dtype)
+
+    buf = jnp.zeros((B, E * C + 1, D), x.dtype)
+    buf = buf.at[jnp.arange(B)[:, None], slot].add(
+        x_rep * keep[..., None].astype(x.dtype))
+    buf = buf[:, : E * C].reshape(B, E, C, D)
+
+    # --- sharding per HopMoE mode ---
+    if mode == "tokens":
+        buf = shard(buf, "dp", "tp", None, None)
+        wg = shard(p["wg"], "tp", None, None)
+        wu = shard(p["wu"], "tp", None, None)
+        wd = shard(p["wd"], "tp", None, None)
+    else:
+        buf = shard(buf, "dp", None, None, None)
+        wg = shard(p["wg"], None, None, "tp")
+        wu = shard(p["wu"], None, None, "tp")
+        wd = shard(p["wd"], None, "tp", None)
+
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, wg)) \
+        * jnp.einsum("becd,edf->becf", buf, wu)
+    out_buf = jnp.einsum("becf,efd->becd", h, wd)              # (B,E,C,D)
+
+    if mode == "tokens":
+        out_buf = shard(out_buf, "dp", "tp", None, None)
+    out_flat = out_buf.reshape(B, E * C, D)
+    out_flat = jnp.concatenate(
+        [out_flat, jnp.zeros((B, 1, D), out_flat.dtype)], axis=1)
+    gathered = jnp.take_along_axis(
+        out_flat, jnp.where(keep, slot, E * C)[..., None], axis=1)  # (B,N,D)
+    routed = (gathered * gate[..., None]).reshape(B, S, k, D).sum(2)
+    routed = shard(routed, "dp", None, None)
+
+    if "shared" in p:
+        from repro.models.transformer.mlp import mlp_forward
+        routed = routed + mlp_forward(p["shared"], x, "swiglu")
+
+    return routed, MoEStats(aux_loss=aux, dispatch_bytes=db,
+                            weight_bytes=wb, mode=mode)

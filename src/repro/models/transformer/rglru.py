@@ -1,0 +1,115 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+The recurrent branch: temporal conv (width 4) → Real-Gated LRU
+    r_t = σ(W_a x_t),  i_t = σ(W_i x_t)
+    log a_t = -c · r_t · softplus(Λ)          (c = 8, per the paper)
+    h_t = a_t ⊙ h_{t-1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t)
+gated by a GeLU branch, then projected out. The linear recurrence runs as a
+``jax.lax.associative_scan`` over the sequence in training/prefill — O(log S)
+depth, TPU-friendly — and as a single fused update in decode.
+
+Decode state = (h: (B, W) f32, conv tail: (B, conv_width-1, W)), constant
+per token — what qualifies recurrentgemma-9b for long_500k.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer.common import init_linear, linear
+
+C_SCALE = 8.0
+
+
+class RGLRUState(NamedTuple):
+    h: jnp.ndarray            # (B, W) f32
+    conv: jnp.ndarray         # (B, conv_width-1, W)
+
+
+def init_rglru_block(key, cfg, dtype):
+    D = cfg.d_model
+    W = cfg.rglru_width or D
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": init_linear(ks[0], D, W, dtype),      # recurrent branch in
+        "w_gate": init_linear(ks[1], D, W, dtype),    # gelu gate branch
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv_width, W)) * 0.1
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((W,), dtype),
+        "wa": init_linear(ks[3], W, W, dtype),        # recurrence gate
+        "wi": init_linear(ks[4], W, W, dtype),        # input gate
+        "lam": jnp.full((W,), 2.0, jnp.float32),      # Λ (softplus > 0)
+        "w_out": init_linear(ks[5], W, D, dtype),
+    }
+
+
+def _conv1d(p, x):
+    """Causal depthwise temporal conv, width cw. x: (B, S, W)."""
+    cw = p["conv_w"].shape[0]
+    xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = sum(xp[:, i: i + x.shape[1]] * p["conv_w"][i] for i in range(cw))
+    return out + p["conv_b"]
+
+
+def _gates(p, u):
+    r = jax.nn.sigmoid(linear(p["wa"], u).astype(jnp.float32))
+    i = jax.nn.sigmoid(linear(p["wi"], u).astype(jnp.float32))
+    log_a = -C_SCALE * r * jax.nn.softplus(p["lam"])
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) \
+        * (i * u.astype(jnp.float32))
+    return a, gated_in
+
+
+def rglru_scan(a, b):
+    """h_t = a_t h_{t-1} + b_t via associative scan over axis 1."""
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+    return jax.lax.associative_scan(combine, (a, b), axis=1)[1]
+
+
+def rglru_block(p, cfg, x, norm, return_state: bool = False):
+    """Full-sequence path. x: (B, S, D). With ``return_state`` also returns
+    the RGLRUState after the last token (stateful prefill)."""
+    from repro.models.transformer.common import rmsnorm
+    h_in = rmsnorm(norm, x)
+    gate = jax.nn.gelu(linear(p["w_gate"], h_in))
+    u_proj = linear(p["w_in"], h_in)
+    u = _conv1d(p, u_proj)
+    a, b = _gates(p, u)
+    h = rglru_scan(a, b)
+    out = x + linear(p["w_out"], h.astype(x.dtype) * gate)
+    if return_state:
+        cw = p["conv_w"].shape[0]
+        tail = jnp.pad(u_proj, ((0, 0), (max(cw - 1 - x.shape[1], 0), 0),
+                                (0, 0)))[:, -(cw - 1):]
+        return out, RGLRUState(h=h[:, -1], conv=tail)
+    return out
+
+
+def init_rglru_state(batch: int, cfg) -> RGLRUState:
+    W = cfg.rglru_width or cfg.d_model
+    return RGLRUState(h=jnp.zeros((batch, W), jnp.float32),
+                      conv=jnp.zeros((batch, cfg.conv_width - 1, W),
+                                     cfg.activation_dtype))
+
+
+def rglru_block_decode(p, cfg, x, norm, state: RGLRUState):
+    """x: (B, 1, D) single token."""
+    from repro.models.transformer.common import rmsnorm
+    h_in = rmsnorm(norm, x)
+    gate = jax.nn.gelu(linear(p["w_gate"], h_in))[:, 0]
+    u_t = linear(p["w_in"], h_in)[:, 0]                  # (B, W)
+    window = jnp.concatenate([state.conv, u_t[:, None]], axis=1)
+    cw = p["conv_w"].shape[0]
+    u_conv = sum(window[:, i] * p["conv_w"][i] for i in range(cw)) \
+        + p["conv_b"]
+    a, b = _gates(p, u_conv[:, None, :] if u_conv.ndim == 2 else u_conv)
+    a, b = a.reshape(u_t.shape[0], -1), b.reshape(u_t.shape[0], -1)
+    h = a * state.h + b
+    out = linear(p["w_out"], (h.astype(x.dtype) * gate))
+    return x + out[:, None], RGLRUState(h=h, conv=window[:, 1:])

@@ -1,0 +1,167 @@
+"""RWKV6 ("Finch") block — attention-free, data-dependent decay.
+
+Per layer: a *time-mix* block (token-shift lerp → r/k/v/g projections, a
+LoRA-conditioned per-channel decay w_t, the gated-linear-attention core from
+:mod:`repro.kernels` with per-head state, group-norm, silu(g) gate) and a
+*channel-mix* block (token-shift, squared-ReLU FFN with sigmoid receptance).
+
+Training runs the chunked kernel over the whole sequence; decode carries
+(state: (B, H, dk, dv) f32, last_x per mix) — constant-size per token, which
+is what qualifies rwkv6-7b for the long_500k shape.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models.transformer.common import init_linear, linear
+
+
+class RWKVState(NamedTuple):
+    s: jnp.ndarray          # (B, H, dk, dv) f32 — linattn state
+    tm_x: jnp.ndarray       # (B, D) — last token seen by time-mix
+    cm_x: jnp.ndarray       # (B, D) — last token seen by channel-mix
+
+
+def init_rwkv_block(key, cfg, dtype):
+    D, F = cfg.d_model, cfg.d_ff
+    hd = cfg.rwkv_head_dim
+    H = D // hd
+    lora = 64
+    ks = jax.random.split(key, 12)
+    return {
+        # time-mix
+        "mu": 0.5 * jnp.ones((5, D), dtype),       # lerp for r,k,v,g,w
+        "wr": init_linear(ks[0], D, D, dtype),
+        "wk": init_linear(ks[1], D, D, dtype),
+        "wv": init_linear(ks[2], D, D, dtype),
+        "wg": init_linear(ks[3], D, D, dtype),
+        "wo": init_linear(ks[4], D, D, dtype),
+        "w_base": jnp.full((D,), -6.0, jnp.float32),   # decay bias (≈ w→1)
+        "w_lora_a": init_linear(ks[5], D, lora, dtype),
+        "w_lora_b": init_linear(ks[6], lora, D, dtype),
+        "u": jnp.zeros((H, hd), jnp.float32),          # per-head bonus
+        "gn_g": jnp.ones((D,), dtype),                 # group-norm (per head)
+        "gn_b": jnp.zeros((D,), dtype),
+        # channel-mix
+        "mu_c": 0.5 * jnp.ones((2, D), dtype),
+        "ck": init_linear(ks[7], D, F, dtype),
+        "cr": init_linear(ks[8], D, D, dtype),
+        "cv": init_linear(ks[9], F, D, dtype),
+    }
+
+
+def _group_norm(x, g, b, heads, eps=1e-5):
+    B, S, D = x.shape
+    xh = x.reshape(B, S, heads, D // heads).astype(jnp.float32)
+    mu = xh.mean(-1, keepdims=True)
+    var = xh.var(-1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + eps)
+    return xh.reshape(B, S, D).astype(x.dtype) * g + b
+
+
+def _decay(p, xw):
+    """Data-dependent per-channel decay w_t ∈ (0, 1), near 1."""
+    lora = linear(p["w_lora_b"], jnp.tanh(linear(p["w_lora_a"], xw)))
+    return jnp.exp(-jnp.exp(p["w_base"] + lora.astype(jnp.float32)))
+
+
+def _timemix_inputs(p, x, x_prev):
+    """Token-shift lerp for each of r,k,v,g,w. x_prev: x shifted right."""
+    mu = p["mu"]
+    xs = [x + (x_prev - x) * mu[i] for i in range(5)]
+    return xs  # r, k, v, g, w
+
+
+def rwkv_timemix(p, cfg, x, x_prev, state_s):
+    """x: (B,S,D); x_prev: right-shifted x; state_s: (B,H,dk,dv) or None."""
+    B, S, D = x.shape
+    hd = cfg.rwkv_head_dim
+    H = D // hd
+    xr, xk, xv, xg, xw = _timemix_inputs(p, x, x_prev)
+    r = linear(p["wr"], xr).reshape(B, S, H, hd)
+    k = linear(p["wk"], xk).reshape(B, S, H, hd)
+    v = linear(p["wv"], xv).reshape(B, S, H, hd)
+    g = linear(p["wg"], xg)
+    w = _decay(p, xw).reshape(B, S, H, hd)
+
+    def to_bh(t):  # (B,S,H,hd) -> (B*H, S, hd)
+        return t.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+
+    chunk = 64 if S % 64 == 0 else (S if S < 64 else 1)
+    if S % chunk:
+        chunk = 1
+    u_bh = jnp.tile(p["u"], (B, 1))                        # (B*H, hd)
+    o, s_new = ops.linattn(to_bh(r).astype(jnp.float32),
+                           to_bh(k).astype(jnp.float32),
+                           to_bh(v).astype(jnp.float32),
+                           to_bh(w), u_bh,
+                           state=(state_s.reshape(B * H, hd, hd)
+                                  if state_s is not None else None),
+                           chunk=chunk)
+    o = o.reshape(B, H, S, hd).transpose(0, 2, 1, 3).reshape(B, S, D)
+    o = _group_norm(o.astype(x.dtype), p["gn_g"], p["gn_b"], H)
+    out = linear(p["wo"], o * jax.nn.silu(g))
+    return out, s_new.reshape(B, H, hd, hd)
+
+
+def rwkv_channelmix(p, x, x_prev):
+    mu = p["mu_c"]
+    xk = x + (x_prev - x) * mu[0]
+    xr = x + (x_prev - x) * mu[1]
+    kk = jnp.square(jax.nn.relu(linear(p["ck"], xk)))
+    return jax.nn.sigmoid(linear(p["cr"], xr)) * linear(p["cv"], kk)
+
+
+def _shift_right(x):
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+
+def rwkv_block(p, cfg, x, norms, return_state: bool = False):
+    """Full-sequence training/prefill. norms = (ln1, ln2) rmsnorm params.
+    With ``return_state`` also returns the RWKVState after the last token
+    (stateful prefill for serving)."""
+    from repro.models.transformer.common import rmsnorm
+    h = rmsnorm(norms[0], x)
+    tm, s_new = rwkv_timemix(p, cfg, h, _shift_right(h), None)
+    tm_x_last = h[:, -1]
+    x = x + tm
+    h2 = rmsnorm(norms[1], x)
+    x = x + rwkv_channelmix(p, h2, _shift_right(h2))
+    if return_state:
+        return x, RWKVState(s=s_new, tm_x=tm_x_last, cm_x=h2[:, -1])
+    return x
+
+
+def rwkv_block_decode(p, cfg, x, norms, state: RWKVState):
+    """x: (B, 1, D) one token; returns (x, new_state)."""
+    from repro.models.transformer.common import rmsnorm
+    B, _, D = x.shape
+    hd = cfg.rwkv_head_dim
+    H = D // hd
+    h = rmsnorm(norms[0], x)
+    h_prev = state.tm_x[:, None, :]
+    xr, xk, xv, xg, xw = _timemix_inputs(p, h, h_prev)
+    r = linear(p["wr"], xr).reshape(B, H, hd)
+    k = linear(p["wk"], xk).reshape(B, H, hd)
+    v = linear(p["wv"], xv).reshape(B, H, hd)
+    g = linear(p["wg"], xg)
+    w = _decay(p, xw).reshape(B, H, hd)
+    o, s_new = ops.linattn_step(
+        r.reshape(B * H, hd).astype(jnp.float32),
+        k.reshape(B * H, hd).astype(jnp.float32),
+        v.reshape(B * H, hd).astype(jnp.float32),
+        w.reshape(B * H, hd), jnp.tile(p["u"], (B, 1)),
+        state.s.reshape(B * H, hd, hd))
+    o = o.reshape(B, 1, D).astype(x.dtype)
+    o = _group_norm(o, p["gn_g"], p["gn_b"], H)
+    x = x + linear(p["wo"], o * jax.nn.silu(g))
+    tm_x_new = h[:, 0]
+
+    h2 = rmsnorm(norms[1], x)
+    x = x + rwkv_channelmix(p, h2, state.cm_x[:, None, :])
+    return x, RWKVState(s=s_new.reshape(B, H, hd, hd),
+                        tm_x=tm_x_new, cm_x=h2[:, 0])

@@ -1,0 +1,6 @@
+from repro.optim.optimizers import (
+    Optimizer, adamw, adam, sgd, clip_by_global_norm, cosine_schedule,
+)
+
+__all__ = ["Optimizer", "adamw", "adam", "sgd", "clip_by_global_norm",
+           "cosine_schedule"]

@@ -1,0 +1,28 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
+see the real single CPU device; multi-device integration tests spawn
+subprocesses that set --xla_force_host_platform_device_count themselves."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def small_dataset():
+    from repro.graph import make_dataset
+    return make_dataset("arxiv", scale=0.03, seed=0)
+
+
+@pytest.fixture(scope="session")
+def partitioned(small_dataset):
+    from repro.graph import ldg_partition
+    from repro.graph.partition import shard_features
+    parts = 4
+    part = ldg_partition(small_dataset.graph, parts, passes=1)
+    table, owner, local_idx = shard_features(small_dataset.features, part,
+                                             parts)
+    return dict(ds=small_dataset, parts=parts, part=part, table=table,
+                owner=owner, local_idx=local_idx)
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)

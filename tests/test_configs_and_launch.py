@@ -1,0 +1,134 @@
+"""Configs, dry-run machinery, and roofline analyzer units."""
+import json
+import math
+
+import jax
+import pytest
+
+from repro.configs import (ARCH_IDS, SHAPES, get_config, input_specs,
+                           shape_applicable, smoke_variant)
+from repro.launch.dryrun import collective_bytes
+from repro.models.transformer.model import scan_length
+
+# published (approximate) parameter counts, billions
+PUBLISHED_B = {
+    "h2o-danube-3-4b": 4.0, "pixtral-12b": 12.4, "nemotron-4-340b": 340.0,
+    "qwen2.5-3b": 3.1, "whisper-base": 0.073, "qwen2-1.5b": 1.5,
+    "recurrentgemma-9b": 9.0, "rwkv6-7b": 7.6,
+    "qwen2-moe-a2.7b": 14.3, "deepseek-moe-16b": 16.4,
+}
+PUBLISHED_ACTIVE_B = {"qwen2-moe-a2.7b": 2.7, "deepseek-moe-16b": 2.8}
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_param_count_matches_published(arch_id):
+    """Exact configs must land within 35 % of the published count (vocab
+    padding + analytic approximations allowed)."""
+    cfg = get_config(arch_id)
+    ours = cfg.param_count() / 1e9
+    ref = PUBLISHED_B[arch_id]
+    assert 0.65 * ref <= ours <= 1.45 * ref, (arch_id, ours, ref)
+    if arch_id in PUBLISHED_ACTIVE_B:
+        act = cfg.active_param_count() / 1e9
+        ref_a = PUBLISHED_ACTIVE_B[arch_id]
+        assert 0.7 * ref_a <= act <= 1.4 * ref_a, (arch_id, act, ref_a)
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_smoke_variant_respects_bounds(arch_id):
+    sv = smoke_variant(get_config(arch_id))
+    assert sv.d_model <= 512
+    assert sv.num_layers <= max(2, len(tuple(sv.block_pattern or ())))
+    if sv.moe_num_experts:
+        assert sv.moe_num_experts <= 4
+    assert sv.family == get_config(arch_id).family
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+@pytest.mark.parametrize("shape", list(SHAPES))
+def test_input_specs_complete(arch_id, shape):
+    cfg = get_config(arch_id)
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        assert "full attention" in reason
+        return
+    specs = input_specs(cfg, shape)
+    sh = SHAPES[shape]
+    if sh.kind == "decode":
+        assert specs["token"].shape == (sh.global_batch,)
+    else:
+        total = sum(v.shape[1] for k, v in specs.items()
+                    if k in ("tokens", "patches"))
+        if cfg.family == "vlm":
+            assert total == sh.seq_len          # patches + text = seq
+        else:
+            assert specs["tokens"].shape == (sh.global_batch, sh.seq_len)
+
+
+def test_long500k_skips_are_exactly_the_full_attention_archs():
+    skipped = {a for a in ARCH_IDS
+               if not shape_applicable(get_config(a), "long_500k")[0]}
+    assert skipped == {"pixtral-12b", "nemotron-4-340b", "qwen2.5-3b",
+                       "whisper-base", "qwen2-1.5b", "qwen2-moe-a2.7b",
+                       "deepseek-moe-16b"}
+
+
+def test_scan_length_per_family():
+    assert scan_length(get_config("nemotron-4-340b")) == 96
+    assert scan_length(get_config("recurrentgemma-9b")) == 12   # 38 // 3
+    assert scan_length(get_config("whisper-base")) == 6
+
+
+def test_collective_census_parser():
+    hlo = """
+  %ag = bf16[16,128]{1,0} all-gather(%x), dimensions={0}
+  %ar.1 = f32[256]{0} all-reduce(%y), to_apply=%sum
+  %tup = (f32[8,8]{1,0}, f32[8,8]{1,0}) all-to-all(%a, %b)
+  %rs = bf16[64]{0} reduce-scatter(%z), dimensions={0}
+  %cp-start = bf16[32,32]{1,0} collective-permute(%w)
+  %not_a_collective = f32[999]{0} add(%p, %q)
+"""
+    c = collective_bytes(hlo)
+    assert c["count_by_op"] == {"all-gather": 1, "all-reduce": 1,
+                                "all-to-all": 1, "reduce-scatter": 1,
+                                "collective-permute": 1}
+    assert c["bytes_by_op"]["all-gather"] == 16 * 128 * 2
+    assert c["bytes_by_op"]["all-reduce"] == 256 * 4
+    assert c["bytes_by_op"]["all-to-all"] == 2 * 8 * 8 * 4
+    assert c["bytes_by_op"]["reduce-scatter"] == 64 * 2
+    assert c["bytes_by_op"]["collective-permute"] == 32 * 32 * 2
+    assert c["total_bytes"] == sum(c["bytes_by_op"].values())
+
+
+def test_roofline_analyze_terms():
+    from benchmarks.roofline import PEAK_FLOPS, analyze
+    rec = {"mesh": "16x16", "shape": "train_4k", "arch": "x",
+           "flops": 1.97e14, "bytes_accessed": 8.19e11,
+           "collective_bytes_total": 5.0e10,
+           "active_params": 1e9}
+    a = analyze(rec)
+    assert math.isclose(a["compute_s"], 1000 / 1000, rel_tol=1e-6)
+    assert math.isclose(a["memory_s"], 1.0, rel_tol=1e-6)
+    assert math.isclose(a["collective_s"], 1.0, rel_tol=1e-6)
+    assert a["dominant"] in ("compute", "memory", "collective")
+    # MODEL_FLOPS = 6 * 1e9 * (256*4096) / 256 chips
+    expect = 6 * 1e9 * 256 * 4096 / 256
+    assert math.isclose(a["model_flops_per_chip"], expect, rel_tol=1e-9)
+
+
+def test_kv_tp_repeat_preserves_semantics():
+    """Replicated KV heads must not change attention output."""
+    import dataclasses
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.data import make_batch
+    from repro.models.transformer import forward, init_params
+    cfg = dataclasses.replace(smoke_variant(get_config("h2o-danube-3-4b")),
+                              dtype="float32")
+    cfg2 = dataclasses.replace(cfg, kv_tp_repeat=2)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg, 2, 32, seed=0)
+    l1, _ = forward(params, cfg, batch)
+    l2, _ = forward(params, cfg2, batch)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               rtol=1e-5, atol=1e-5)

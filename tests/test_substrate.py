@@ -1,0 +1,89 @@
+"""Substrates: checkpointing, data pipeline, optimizers."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+from repro.configs import get_config, smoke_variant
+from repro.data import make_batch, token_batches
+from repro.optim import adamw, clip_by_global_norm, cosine_schedule, sgd
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6.0).reshape(2, 3),
+            "b": [jnp.ones((4,), jnp.bfloat16), jnp.zeros((), jnp.int32)]}
+    save_checkpoint(tmp_path, 7, tree, extra={"lr": 0.1})
+    restored, step, extra = load_checkpoint(tmp_path, tree)
+    assert step == 7 and extra == {"lr": 0.1}
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_prunes_and_tracks_latest(tmp_path):
+    tree = {"x": jnp.zeros((2,))}
+    for s in (1, 2, 3, 4, 5):
+        save_checkpoint(tmp_path, s, tree, keep=2)
+    assert latest_step(tmp_path) == 5
+    kept = sorted(p.name for p in tmp_path.glob("step-*.npz"))
+    assert len(kept) == 2 and kept[-1] == "step-00000005.npz"
+
+
+def test_checkpoint_leaf_count_guard(tmp_path):
+    save_checkpoint(tmp_path, 1, {"a": jnp.zeros((2,))})
+    with pytest.raises(ValueError):
+        load_checkpoint(tmp_path, {"a": jnp.zeros((2,)),
+                                   "b": jnp.zeros((2,))})
+
+
+def test_data_pipeline_deterministic_and_in_range():
+    cfg = smoke_variant(get_config("qwen2-1.5b"))
+    b1 = make_batch(cfg, 4, 64, seed=9)
+    b2 = make_batch(cfg, 4, 64, seed=9)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert int(b1["tokens"].max()) < cfg.vocab_size
+    assert int(b1["tokens"].min()) >= 0
+    batches = list(token_batches(cfg, 2, 32, steps=3, seed=1))
+    assert len(batches) == 3
+    assert not np.array_equal(batches[0]["tokens"], batches[1]["tokens"])
+
+
+def test_data_pipeline_modalities():
+    vlm = smoke_variant(get_config("pixtral-12b"))
+    b = make_batch(vlm, 2, 32, seed=0)
+    assert b["patches"].shape[2] == vlm.patch_dim
+    assert b["patches"].shape[1] + b["tokens"].shape[1] == 32
+    audio = smoke_variant(get_config("whisper-base"))
+    b = make_batch(audio, 2, 32, seed=0)
+    assert b["frames"].shape[1:] == (audio.encoder_seq, audio.encoder_d_model)
+
+
+def test_adamw_converges_quadratic():
+    opt = adamw(0.1)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        params, state = opt.update(grads, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_sgd_momentum_and_clip():
+    opt = sgd(0.05, momentum=0.9)
+    params = {"w": jnp.asarray([4.0])}
+    state = opt.init(params)
+    for _ in range(100):
+        grads = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        params, state = opt.update(grads, state, params)
+    assert abs(float(params["w"][0])) < 0.05
+    g, norm = clip_by_global_norm({"a": jnp.full((4,), 10.0)}, 1.0)
+    assert float(jnp.sqrt(jnp.sum(jnp.square(g["a"])))) <= 1.0 + 1e-5
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1.0, warmup=10, total=100)
+    assert float(lr(0)) == 0.0
+    assert abs(float(lr(10)) - 1.0) < 1e-6
+    assert float(lr(100)) < 1e-6
+    assert float(lr(55)) < float(lr(20))
