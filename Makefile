@@ -1,0 +1,22 @@
+# Convenience wrappers — all targets set PYTHONPATH=src so `make test`
+# works from a clean checkout with no install step.
+PYTHON ?= python
+export PYTHONPATH := src:$(PYTHONPATH)
+
+.PHONY: test test-all bench-smoke train-smoke
+
+# Fast lane (tier-1): everything except @pytest.mark.slow (pyproject default)
+test:
+	$(PYTHON) -m pytest -x -q
+
+# Full suite including the slow multi-device integration tests
+test-all:
+	$(PYTHON) -m pytest -q -m ""
+
+# Quick pass over every benchmark suite (ratios, 1-CPU-core scales)
+bench-smoke:
+	$(PYTHON) -m benchmarks.run
+
+# 3-epoch compile-once smoke train (prints first vs steady epoch times)
+train-smoke:
+	$(PYTHON) examples/train_hopgnn.py --preset smoke

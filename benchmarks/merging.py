@@ -12,6 +12,7 @@ import numpy as np
 from benchmarks.common import Bench, DEFAULT_FABRIC, sample_roots, setup
 from repro.core import MergingController, plan_iteration
 from repro.core.micrograph import hopgnn_assignment
+from repro.train import merging_walk
 
 STEP_OVERHEAD_S = 3e-3      # per-time-step sync + kernel-launch cost model
 F32 = 4
@@ -54,16 +55,13 @@ def run(quick=True):
         base = hopgnn_assignment([np.asarray(r, np.int64) for r in roots],
                                  env["part"])
         ctl = MergingController(base=base)
-        for epoch in range(6):
-            amat = ctl.assignment_for_epoch()
-            t, plan = _epoch_time(env, roots, amat, fanout, dim)
-            b.emit(f"fig17-{dataset}", f"epoch{epoch}_steps",
-                   amat.num_steps)
+        walk = merging_walk(
+            ctl, lambda amat: _epoch_time(env, roots, amat, fanout, dim),
+            max_epochs=6)
+        for epoch, (steps, t, _plan) in enumerate(walk):
+            b.emit(f"fig17-{dataset}", f"epoch{epoch}_steps", steps)
             b.emit(f"fig17-{dataset}", f"epoch{epoch}_time_ms",
                    round(1000 * t, 2))
-            ctl.record_epoch_time(t)
-            if ctl.frozen:
-                break
         frozen_at[dataset] = ctl.assignment_for_epoch().num_steps
         b.emit(f"fig17-{dataset}", "frozen_at_steps", frozen_at[dataset])
 

@@ -1,22 +1,28 @@
-"""Quickstart: HopGNN in ~60 lines.
+"""Quickstart: LeapGNN (the paper's system; titled "HopGNN") in ~70 lines.
 
 Builds a synthetic community graph, partitions it METIS-style, plans one
-feature-centric (micrograph) training iteration, and shows the paper's
-three headline quantities next to the model-centric baseline:
+feature-centric (micrograph) training iteration under a compile-once shape
+budget, and shows the paper's three headline quantities next to the
+model-centric baseline:
 
   * remote feature rows (the communication bottleneck, Fig. 4)
   * miss rate (Fig. 14)
   * gradient parity (Table 3 — same batch => same gradient)
+
+then runs two epochs through the repro.train Trainer (the compile-once
+loop used by the full driver).
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import numpy as np
 
-from repro.core import plan_iteration, run_iteration
+from repro.core import run_iteration
 from repro.graph import make_dataset
 from repro.graph.partition import community_partition, shard_features
 from repro.models.gnn import GNNConfig, init_gnn
+from repro.optim import adam
+from repro.train import ShapeBudget, Trainer
 
 N_SHARDS = 4
 
@@ -32,21 +38,22 @@ rng = np.random.default_rng(0)
 tv = ds.train_vertices()
 roots = [rng.choice(tv, 32, replace=False) for _ in range(N_SHARDS)]
 
-# 3. plan the same iteration under both paradigms (same sampled trees:
-#    stateless sampling makes the comparison exact)
-kw = dict(num_layers=2, fanout=10, sample_seed=42)
-plan_mc = plan_iteration(ds.graph, ds.labels, part, owner, local_idx,
-                         table.shape[1], roots,
-                         strategy="model_centric", **kw)
-plan_hop = plan_iteration(ds.graph, ds.labels, part, owner, local_idx,
-                          table.shape[1], roots,
-                          strategy="hopgnn", pregather=True, **kw)
+# 3. plan the same iteration under both paradigms through one shared shape
+#    budget (stateless sampling makes the comparison exact; the budget
+#    quantizes device shapes so repeated plans reuse one compiled program)
+budget = ShapeBudget()
+kw = dict(graph=ds.graph, labels=ds.labels, part=part, owner=owner,
+          local_idx=local_idx, local_rows=table.shape[1],
+          roots_per_model=roots, num_layers=2, fanout=10, sample_seed=42)
+plan_mc = budget.plan(strategy="model_centric", **kw)
+plan_hop = budget.plan(strategy="hopgnn", pregather=True, **kw)
 
 print(f"\nmodel-centric: {plan_mc.remote_rows_exact:6d} remote rows, "
       f"miss {100 * plan_mc.miss_rate():.1f}%")
 print(f"hopgnn:        {plan_hop.remote_rows_exact:6d} remote rows, "
       f"miss {100 * plan_hop.miss_rate():.1f}%, "
-      f"{plan_hop.num_steps} time steps")
+      f"{plan_hop.num_steps} time steps "
+      f"(budget batch_pad={budget.batch_pad}, r_max={budget.r_max})")
 
 # 4. run both; gradients must match (accuracy fidelity)
 cfg = GNNConfig(model="sage", num_layers=2, hidden_dim=64,
@@ -60,3 +67,14 @@ dmax = max(float(abs(a - b).max())
 print(f"\nloss: model-centric {float(loss_mc):.4f} vs "
       f"hopgnn {float(loss_hop):.4f}")
 print(f"max gradient difference: {dmax:.2e}  (accuracy fidelity, Table 3)")
+
+# 5. the compile-once loop: two epochs through the Trainer
+trainer = Trainer(graph=ds.graph, labels=ds.labels, part=part, owner=owner,
+                  local_idx=local_idx, table=table, cfg=cfg,
+                  optimizer=adam(5e-3), params=params,
+                  train_vertices=tv, merging=False)
+stats = trainer.fit(epochs=2, iters_per_epoch=4, batch_per_model=8)
+print(f"\ntrainer: epoch0 {stats[0].time_s:.2f}s "
+      f"({stats[0].traces} jit traces) -> "
+      f"epoch1 {stats[1].time_s:.2f}s ({stats[1].traces} traces), "
+      f"loss {stats[0].loss:.3f} -> {stats[1].loss:.3f}")

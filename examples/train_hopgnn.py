@@ -1,8 +1,14 @@
-"""End-to-end HopGNN training driver (deliverable b).
+"""End-to-end LeapGNN training driver (deliverable b).
 
-Full loop: synthetic dataset → METIS-style partition → per-epoch planning
-(redistribution + pre-gathering + adaptive merging) → device iteration →
+Full loop via the repro.train Trainer: synthetic dataset → METIS-style
+partition → compile-once planning (shape budget + plan prefetch +
+redistribution + pre-gathering + adaptive merging) → device iteration →
 AdamW → eval + iteration-level checkpointing.
+
+The Trainer plans every iteration under one quantized shape budget, so the
+jitted iteration traces once per merge pattern instead of once per step:
+epoch 0 pays compilation, epochs ≥1 run at steady-state device speed (both
+times are printed).
 
 Presets:
   --preset smoke   ~1 min on 1 CPU core (default)
@@ -13,21 +19,15 @@ Presets:
     PYTHONPATH=src python examples/train_hopgnn.py --preset smoke
 """
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.checkpoint import save_checkpoint
-from repro.core import MergingController, plan_iteration, run_iteration
-from repro.core.micrograph import hopgnn_assignment
+from repro.core import distributed as engine
 from repro.graph import make_dataset
 from repro.graph.partition import community_partition, shard_features
-from repro.graph.sampler import sample_tree_block
-from repro.models.gnn import (GNNConfig, gnn_forward, init_gnn,
-                              model_param_bytes)
+from repro.models.gnn import GNNConfig, init_gnn, model_param_bytes
 from repro.optim import adamw, cosine_schedule
+from repro.train import Trainer
 
 PRESETS = {
     "smoke": dict(scale=0.03, hidden=64, fanout=4, layers=2, batch=16,
@@ -44,6 +44,7 @@ def main() -> None:
     ap.add_argument("--strategy", default="hopgnn",
                     choices=["hopgnn", "model_centric", "lo"])
     ap.add_argument("--ckpt-dir", default="/tmp/hopgnn_ckpt")
+    ap.add_argument("--resume", action="store_true")
     args = ap.parse_args()
     P = PRESETS[args.preset]
 
@@ -62,60 +63,29 @@ def main() -> None:
     opt = adamw(cosine_schedule(3e-3, warmup=10,
                                 total=P["epochs"] * P["iters"]),
                 weight_decay=1e-4, grad_clip=1.0)
-    state = opt.init(params)
-    rng = np.random.default_rng(0)
-    tv = ds.train_vertices()
-    ctl = None
+    trainer = Trainer(
+        graph=ds.graph, labels=ds.labels, part=part, owner=owner,
+        local_idx=local_idx, table=table, cfg=cfg, optimizer=opt,
+        params=params, strategy=args.strategy,
+        train_vertices=ds.train_vertices(), ckpt_dir=args.ckpt_dir)
 
-    step = 0
-    for epoch in range(P["epochs"]):
-        t0 = time.perf_counter()
-        ep_loss, remote = 0.0, 0
-        for it in range(P["iters"]):
-            roots = [rng.choice(tv, P["batch"] // args.shards,
-                                replace=False)
-                     for _ in range(args.shards)]
-            assignment = None
-            if args.strategy == "hopgnn":
-                base = hopgnn_assignment(
-                    [np.asarray(r, np.int64) for r in roots], part)
-                if ctl is None:
-                    ctl = MergingController(base=base)
-                # merging pattern follows the controller's step count
-                a = ctl.assignment_for_epoch()
-                assignment = base if a.num_steps == base.num_steps else None
-            plan = plan_iteration(
-                ds.graph, ds.labels, part, owner, local_idx,
-                table.shape[1], roots, num_layers=cfg.num_layers,
-                fanout=cfg.fanout, strategy=args.strategy,
-                assignment=assignment, sample_seed=epoch * 10_000 + it)
-            grads, loss = run_iteration(params, table, plan, cfg)
-            params, state = opt.update(grads, state, params)
-            ep_loss += float(loss)
-            remote += plan.remote_rows_exact
-            step += 1
-        dt = time.perf_counter() - t0
-        if ctl is not None:
-            ctl.record_epoch_time(dt)
-        acc = evaluate(ds, cfg, params)
-        print(f"epoch {epoch}: loss {ep_loss / P['iters']:.4f} "
-              f"acc {100 * acc:.1f}% remote_rows {remote} "
-              f"({dt:.1f}s)")
-        save_checkpoint(args.ckpt_dir, step, params,
-                        extra={"epoch": epoch, "acc": acc})
+    tc0 = engine.trace_count()
+    stats = trainer.fit(epochs=P["epochs"], iters_per_epoch=P["iters"],
+                        batch_per_model=P["batch"] // args.shards,
+                        eval_every=1, resume=args.resume, log=print)
+    if not stats:
+        print("nothing to do: checkpoint already covers every epoch "
+              f"(step {trainer.global_step})")
+        return
+    first, rest = stats[0], stats[1:]
+    if rest:
+        print(f"compile-once: epoch 0 {first.time_s:.2f}s "
+              f"(incl. compile) vs epochs>=1 mean "
+              f"{sum(s.time_s for s in rest) / len(rest):.2f}s; "
+              f"{engine.trace_count() - tc0} traces total, "
+              f"budget {trainer.budget.signature()} "
+              f"({trainer.budget.rebuckets} rebuckets)")
     print(f"done; checkpoints in {args.ckpt_dir}")
-
-
-def evaluate(ds, cfg, params, n_eval=512, seed=123) -> float:
-    rng = np.random.default_rng(seed)
-    nodes = rng.choice(ds.num_vertices, min(n_eval, ds.num_vertices),
-                       replace=False)
-    blk = sample_tree_block(ds.graph, nodes, cfg.num_layers, cfg.fanout,
-                            seed=999)
-    feats = [jnp.asarray(ds.features[ids]) for ids in blk.hops]
-    logits = gnn_forward(params, cfg, feats)
-    return float((jnp.argmax(logits, -1) ==
-                  jnp.asarray(ds.labels[nodes])).mean())
 
 
 if __name__ == "__main__":

@@ -1,6 +1,6 @@
 """Iteration-level checkpointing (paper §8).
 
-HopGNN's models visit several servers per iteration; the paper's insight is
+LeapGNN's models visit several servers per iteration; the paper's insight is
 that checkpointing at *iteration* boundaries (after gradients are applied
 and partial-gradient state is cleared) needs only (iteration id, model
 parameters) — no in-flight time-step state. We implement exactly that:

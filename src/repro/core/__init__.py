@@ -1,8 +1,11 @@
-"""HopGNN core — the paper's contribution.
+"""LeapGNN core — the paper's contribution. (The paper's *title* says
+"HopGNN" but the text names the system LeapGNN; this repo keeps "hopgnn"
+as the strategy key for continuity and uses LeapGNN when naming the
+system.)
 
 Feature-centric distributed GNN training: instead of fetching remote vertex
 features to stationary data-parallel model replicas (model-centric, DGL
-style), HopGNN redistributes each mini-batch's root vertices to the servers
+style), LeapGNN redistributes each mini-batch's root vertices to the servers
 that own their features ("home" servers), trains per-root *micrographs*
 there over N rotating time steps (model migration — free under SPMD
 replication, see DESIGN.md §2), pre-gathers the deduplicated remote feature
@@ -11,20 +14,27 @@ set once per iteration, and adaptively merges time steps.
 Public API:
   - plan_iteration(...)        host-side planner → IterationPlan
   - run_iteration(...)         device engine (shard_map or emulated comm)
+  - PlanOverflow               structured shape-budget overflow signal
   - MergingController          §5.3 adaptive time-step merging
   - comm_model.*               byte accounting for every strategy
+
+The compile-once training loop over these primitives lives in
+:mod:`repro.train` (shape budgets, compiled-fn reuse, plan prefetching).
 """
 from repro.core.strategies import plan_iteration, IterationPlan, Strategy
 from repro.core.distributed import (
-    run_iteration, make_sharded_iteration, EmulatedComm, ShardComm,
+    run_iteration, make_sharded_iteration, get_compiled_iteration,
+    EmulatedComm, ShardComm,
 )
-from repro.core.merging import MergingController
+from repro.core.merging import MergingController, fold_assignment
+from repro.core.pregather import PlanOverflow
 from repro.core.p3 import P3Plan, P3Unsupported, plan_p3, run_p3_iteration
 from repro.core import comm_model
 
 __all__ = [
     "plan_iteration", "IterationPlan", "Strategy", "run_iteration",
-    "make_sharded_iteration", "EmulatedComm", "ShardComm",
-    "MergingController", "comm_model",
+    "make_sharded_iteration", "get_compiled_iteration",
+    "EmulatedComm", "ShardComm",
+    "MergingController", "fold_assignment", "PlanOverflow", "comm_model",
     "P3Plan", "P3Unsupported", "plan_p3", "run_p3_iteration",
 ]

@@ -10,15 +10,23 @@ interface with two implementations:
   arrays on a single device. Bit-identical numerics, used by unit tests and
   the CPU benchmark harness (1-core container).
 
-The feature exchange is HopGNN's pre-gathering (§5.2) mapped to TPU: one
+The feature exchange is LeapGNN's pre-gathering (§5.2; the paper titles the
+system "HopGNN" but names it LeapGNN in the text) mapped to TPU: one
 all_to_all carries the (deduplicated) request indices, a second carries the
 feature rows back — the SPMD analogue of the paper's batched gRPC fetch.
 Training then scans the iteration's time steps (§5.1), accumulating
 gradients, and ends with a single data-parallel gradient reduction.
+
+Compile-once contract: jitted callables are built once per
+``(cfg, pregather, mesh, axis)`` by :func:`get_compiled_iteration` and
+reused by every ``run_iteration`` call; the true global batch size is a
+*traced* scalar (``denom``), so varying true batch sizes never retrace.
+Each (re)trace is appended to a module-level trace log, which the
+repro.train Trainer and the regression tests use to assert the
+compile-once invariant.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable, Optional
 
 import jax
@@ -27,6 +35,17 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.models.gnn.models import GNNConfig, gnn_loss
+
+
+def _shard_map(body, mesh, in_specs, out_specs):
+    """Version-compatible shard_map: jax.shard_map(check_vma=...) moved from
+    jax.experimental.shard_map.shard_map(check_rep=...)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
 
 
 def tree_add(a, b):
@@ -121,9 +140,10 @@ def _shard_grads(params, cfg: GNNConfig, workspace_fn: Callable,
 
 
 def _iteration_shard(params, table, dev, cfg: GNNConfig, pregather: bool,
-                     global_batch: int, comm: ShardComm):
+                     denom, comm: ShardComm):
     """Body run on every shard inside shard_map. ``dev`` = plan.device_args()
-    with the leading shard axis already stripped."""
+    with the leading shard axis already stripped. ``denom`` is the true
+    global batch size as a traced scalar (not static — see module doc)."""
     if pregather:
         recv = comm.exchange(table, dev["req"])            # (P, r_max, d)
         ws = jnp.concatenate([table, recv.reshape(-1, table.shape[1])], 0)
@@ -135,9 +155,70 @@ def _iteration_shard(params, table, dev, cfg: GNNConfig, pregather: bool,
             return jnp.concatenate([table, recv.reshape(-1, table.shape[1])], 0)
     grads, loss_sum = _shard_grads(params, cfg, workspace_fn,
                                    dev["hop_idx"], dev["labels"], dev["weights"])
-    grads = comm.grad_mean(grads, float(global_batch))
-    loss = jax.lax.psum(loss_sum, comm.axis) / float(global_batch)
+    grads = comm.grad_mean(grads, denom)
+    loss = jax.lax.psum(loss_sum, comm.axis) / denom
     return grads, loss
+
+
+# ---------------------------------------------------------------------------
+# Compiled-fn cache + trace log (compile-once contract)
+# ---------------------------------------------------------------------------
+
+# (cfg, pregather, mesh, axis) -> jitted callable. jit's own cache then keys
+# on argument shapes/dtypes, so one entry serves every shape bucket; a new
+# bucket retraces exactly once and is recorded in the trace log.
+_COMPILE_CACHE: dict = {}
+
+# Every jit (re)trace of an iteration body appends one record here. The
+# append runs at *trace* time only, so executions of an already-compiled
+# shape are invisible — exactly the signal the compile-once tests need.
+_TRACE_LOG: list = []
+
+
+def trace_count() -> int:
+    """Number of iteration-body jit traces since process start / last reset."""
+    return len(_TRACE_LOG)
+
+
+def trace_log() -> tuple:
+    """Immutable view of the trace records: (kind, model, pregather, shapes)."""
+    return tuple(_TRACE_LOG)
+
+
+def reset_trace_log() -> None:
+    _TRACE_LOG.clear()
+
+
+def clear_compile_cache() -> None:
+    """Drop cached jitted callables (forces fresh traces — test isolation)."""
+    _COMPILE_CACHE.clear()
+
+
+def _shape_sig(tree) -> tuple:
+    return tuple((tuple(x.shape), str(x.dtype)) for x in jax.tree.leaves(tree))
+
+
+def _note_trace(kind: str, cfg: GNNConfig, pregather: bool, table, dev):
+    _TRACE_LOG.append((kind, cfg.model, bool(pregather),
+                       tuple(table.shape), _shape_sig(dev)))
+
+
+def get_compiled_iteration(cfg: GNNConfig, pregather: bool,
+                           mesh: Optional[Mesh] = None, axis: str = "data"):
+    """Return the cached jitted iteration fn for this engine configuration.
+
+    The callable's signature is ``fn(params, table, dev, denom)`` where
+    ``denom`` is the true global batch size as a float32 scalar. Building
+    the callable is cheap; *tracing* happens lazily per argument-shape
+    bucket inside jit and is what the trace log records.
+    """
+    key = (cfg, bool(pregather), mesh, axis if mesh is not None else None)
+    fn = _COMPILE_CACHE.get(key)
+    if fn is None:
+        fn = (_build_emulated(cfg, pregather) if mesh is None
+              else _build_sharded(cfg, pregather, mesh, axis))
+        _COMPILE_CACHE[key] = fn
+    return fn
 
 
 # ---------------------------------------------------------------------------
@@ -152,40 +233,49 @@ def run_iteration(params, table_global, plan, cfg: GNNConfig,
     real collectives. Without: single-device emulation (same numerics).
     Returns (grads, mean_loss) — optimizer application is the caller's
     (training loop / train_step fusion decide placement).
+
+    The jitted callable comes from the module-level compile cache: repeated
+    calls with plans of the same device shapes reuse one compiled program.
     """
     dev = jax.tree.map(jnp.asarray, plan.device_args())
-    if mesh is not None:
-        fn = make_sharded_iteration(cfg, plan.pregather, plan.global_batch, mesh)
-        return fn(params, table_global, dev)
-    return _run_emulated(params, jnp.asarray(table_global), dev, cfg,
-                         plan.pregather, plan.global_batch)
+    denom = jnp.asarray(float(plan.global_batch), jnp.float32)
+    fn = get_compiled_iteration(cfg, plan.pregather, mesh=mesh)
+    return fn(params, jnp.asarray(table_global), dev, denom)
 
 
-def make_sharded_iteration(cfg: GNNConfig, pregather: bool,
-                           global_batch: int, mesh: Mesh,
+def make_sharded_iteration(cfg: GNNConfig, pregather: bool, mesh: Mesh,
                            axis: str = "data"):
-    """jit-compiled shard_map iteration for repeated use by the train loop."""
+    """jit-compiled shard_map iteration ``fn(params, table, dev, denom)``
+    for repeated use by the train loop (cached per configuration)."""
+    return get_compiled_iteration(cfg, pregather, mesh=mesh, axis=axis)
+
+
+def _build_sharded(cfg: GNNConfig, pregather: bool, mesh: Mesh, axis: str):
     comm = ShardComm(axis)
 
-    def body(params, table, dev):
+    def body(params, table, dev, denom):
+        _note_trace("sharded", cfg, pregather, table, dev)
         # shard_map passes per-shard views with the shard axis kept (size 1)
         table = table[0]
         dev = jax.tree.map(lambda x: x[0], dev)
         grads, loss = _iteration_shard(params, table, dev, cfg, pregather,
-                                       global_batch, comm)
+                                       denom, comm)
         return grads, loss
 
-    shmapped = jax.shard_map(
-        body, mesh=mesh,
-        in_specs=(P(), P(axis), P(axis)),
-        out_specs=(P(), P()),
-        check_vma=False)
+    shmapped = _shard_map(body, mesh, (P(), P(axis), P(axis), P()),
+                          (P(), P()))
     return jax.jit(shmapped)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "pregather", "global_batch"))
-def _run_emulated(params, table_g, dev, cfg: GNNConfig, pregather: bool,
-                  global_batch: int):
+def _build_emulated(cfg: GNNConfig, pregather: bool):
+    def body(params, table_g, dev, denom):
+        _note_trace("emulated", cfg, pregather, table_g, dev)
+        return _emulated_iteration(params, table_g, dev, denom, cfg, pregather)
+    return jax.jit(body)
+
+
+def _emulated_iteration(params, table_g, dev, denom, cfg: GNNConfig,
+                        pregather: bool):
     """Single-device emulation: python-loop over shards, explicit exchange."""
     ecomm = EmulatedComm()
     n = table_g.shape[0]
@@ -209,6 +299,6 @@ def _run_emulated(params, table_g, dev, cfg: GNNConfig, pregather: bool,
                             dev["labels"][s], dev["weights"][s])
         per_shard.append((g, l))
     grads_g = jax.tree.map(lambda *xs: jnp.stack(xs), *[g for g, _ in per_shard])
-    grads = ecomm.grad_mean_global(grads_g, float(global_batch))
-    loss = sum(l for _, l in per_shard) / float(global_batch)
+    grads = ecomm.grad_mean_global(grads_g, denom)
+    loss = sum(l for _, l in per_shard) / denom
     return grads, loss

@@ -46,7 +46,13 @@ def merge_min_step(amat: AssignmentMatrix,
         new_groups.setdefault((s, nt), []).extend(
             (d, r.copy()) for d, r in gs)
         for d, _ in gs:
-            per_model_targets.setdefault(d, []).append((s, nt))
+            # Dedupe: a model with several groups at one (server, step) slot
+            # (common after a previous merge round) must count that slot
+            # once, or array_split over-weights it and skews the even
+            # redistribution Fig. 10 requires.
+            tgt = per_model_targets.setdefault(d, [])
+            if (s, nt) not in tgt:
+                tgt.append((s, nt))
 
     for (s, t), gs in amat.groups.items():
         if t != t_min:
@@ -74,6 +80,23 @@ def merge_random_step(amat: AssignmentMatrix, rng: np.random.Generator
     return merge_min_step(amat, ts_min=t)
 
 
+def fold_assignment(base: AssignmentMatrix, num_steps: int,
+                    selector: str = "min",
+                    rng: Optional[np.random.Generator] = None
+                    ) -> AssignmentMatrix:
+    """Fold ``base`` down to ``num_steps`` time steps by repeated merging.
+
+    This is how a frozen merge *pattern* (a step count, decided once by the
+    examination period) is applied to each epoch's fresh mini-batch
+    assignment: the controller owns the depth, the per-iteration roots stay
+    the model's own (accuracy fidelity)."""
+    amat = base
+    while amat.num_steps > max(1, num_steps):
+        amat = (merge_min_step(amat) if selector == "min"
+                else merge_random_step(amat, rng or np.random.default_rng(0)))
+    return amat
+
+
 @dataclasses.dataclass
 class MergingController:
     """Epoch-level examination loop (§5.3 'How many').
@@ -81,7 +104,15 @@ class MergingController:
     Call ``assignment_for_epoch()`` before each epoch and
     ``record_epoch_time(seconds)`` after it. From epoch 2 on, the controller
     proposes one more merge per epoch while measured time improves, then
-    freezes."""
+    freezes.
+
+    Timing signal: pass *steady-state* epoch time — device execution only,
+    excluding host planning and (critically) XLA compilation. A merge
+    changes the iteration's device shapes, so the first iteration after a
+    pattern change retraces; feeding that wall time back in would measure
+    the compiler, not the kernel-switch/sync overhead §5.3 trades against,
+    and invert the signal. The repro.train Trainer computes the compile-free
+    time via the distributed-engine trace log."""
 
     base: AssignmentMatrix
     selector: str = "min"          # "min" (paper) | "random" (RD baseline)
@@ -99,8 +130,43 @@ class MergingController:
     def frozen(self) -> bool:
         return self._frozen
 
+    @property
+    def last_epoch_time(self) -> Optional[float]:
+        """Most recent recorded epoch time (the examination baseline)."""
+        return self._times[-1] if self._times else None
+
+    @property
+    def pattern_steps(self) -> int:
+        """The merge pattern: how many time steps the controller currently
+        folds the base rotation down to."""
+        return self._current.num_steps
+
     def assignment_for_epoch(self) -> AssignmentMatrix:
         return self._current
+
+    def apply_to(self, base: AssignmentMatrix) -> AssignmentMatrix:
+        """Apply the current merge pattern to a *fresh* per-iteration
+        assignment (new mini-batch, same fold depth)."""
+        return fold_assignment(base, self.pattern_steps, self.selector,
+                               self._rng)
+
+    def restore(self, num_steps: int, frozen: bool,
+                last_time: Optional[float] = None) -> None:
+        """Resume from a checkpointed pattern.
+
+        ``last_time`` re-seeds the examination baseline so the first
+        post-resume epoch is compared against the pre-resume measurement
+        (otherwise the controller would merge unconditionally). The revert
+        target is reconstructed as the one-step-shallower fold, so a
+        regression after resume can still undo the last merge."""
+        self._current = fold_assignment(self.base, num_steps, self.selector,
+                                        self._rng)
+        self._previous = (fold_assignment(self.base, num_steps + 1,
+                                          self.selector, self._rng)
+                          if num_steps < self.base.num_steps else None)
+        self._frozen = bool(frozen)
+        self._times = [] if last_time is None else [float(last_time)]
+        self.history.append(self._current.num_steps)
 
     def record_epoch_time(self, seconds: float) -> None:
         self._times.append(seconds)

@@ -1,7 +1,7 @@
 """Micrograph construction and root-vertex redistribution (paper §4, §5.1).
 
 An *assignment* maps every (server s, time step t) to the list of
-(model d, roots) groups trained there. HopGNN's rotation schedule places
+(model d, roots) groups trained there. LeapGNN's rotation schedule places
 model d on server (d + t) mod N at step t; merging (§5.3) later edits this
 matrix. The planner consumes the assignment and emits device-ready index
 arrays.
@@ -93,11 +93,22 @@ def lo_assignment(roots_per_model: list[np.ndarray], part: np.ndarray
 
 def micrograph_locality_stats(blocks_hops: list[list[np.ndarray]],
                               part: np.ndarray) -> tuple[float, float]:
-    """(R_micro-style local fraction, remote fraction) over tree blocks."""
+    """(R_micro-style local fraction, remote fraction) over tree blocks.
+
+    Each root's subtree is scored against *that root's own* home server.
+    The fixed-fanout layout makes the per-root slice rectangular: root i of
+    a B-root block owns ``hops[h][i * f**h : (i+1) * f**h]``, so a
+    multi-root block with mixed homes is no longer lumped under the first
+    root's partition."""
     local = total = 0
     for hops in blocks_hops:
-        home = part[hops[0][0]]
+        roots = np.asarray(hops[0])
+        b = roots.shape[0]
+        if b == 0:
+            continue
+        homes = part[roots]
         for h in hops[1:]:
-            local += int((part[h] == home).sum())
+            per_root = h.size // b          # f**h vertices per root subtree
+            local += int((part[h] == np.repeat(homes, per_root)).sum())
             total += h.size
     return (local / max(total, 1), 1.0 - local / max(total, 1))

@@ -9,13 +9,28 @@ The exchange plan is expressed as TPU-friendly rectangular arrays:
 ``req[s, p] : (R_max,)`` peer-local row indices shard s wants from shard p,
 padded with 0; true counts ride along for exact byte accounting. The device
 engine turns this into two ``all_to_all`` collectives (indices out,
-features back) — the SPMD analogue of HopGNN's batched gRPC fetch.
+features back) — the SPMD analogue of LeapGNN's batched gRPC fetch.
 """
 from __future__ import annotations
 
 import dataclasses
 
 import numpy as np
+
+
+class PlanOverflow(ValueError):
+    """A rectangular plan array would not fit the requested shape budget.
+
+    Carries which budgeted dimension overflowed (``"batch_pad"`` or
+    ``"r_max"``) and the size actually needed, so callers (repro.train's
+    ShapeBudget) can re-bucket precisely instead of parsing messages.
+    """
+
+    def __init__(self, field: str, needed: int, limit: int):
+        super().__init__(f"{field} overflow: need {needed} > {field}={limit}")
+        self.field = field
+        self.needed = int(needed)
+        self.limit = int(limit)
 
 
 @dataclasses.dataclass
@@ -61,7 +76,7 @@ def build_gather_plan(needed_ids_per_shard: list[np.ndarray],
     if r_max is None:
         r_max = max(1, int(counts.max()))
     if counts.max() > r_max:
-        raise ValueError(f"pregather overflow: need {counts.max()} > r_max={r_max}")
+        raise PlanOverflow("r_max", int(counts.max()), int(r_max))
 
     req = np.zeros((n, n, r_max), np.int32)
     slot_of: list[dict[int, int]] = []

@@ -1,7 +1,8 @@
 """Iteration planner: strategy -> device-ready IterationPlan.
 
-The planner is the host-side half of HopGNN (sampling and bookkeeping run on
-CPU in DGL too). It consumes a training-strategy name plus the mini-batch
+The planner is the host-side half of LeapGNN — the paper's system name; its
+title says "HopGNN" and this repo keeps ``hopgnn`` as the strategy key.
+Sampling and bookkeeping run on CPU in DGL too. It consumes a training-strategy name plus the mini-batch
 and emits rectangular numpy arrays the device engine executes without any
 dynamic shapes:
 
@@ -33,7 +34,8 @@ from repro.core.micrograph import (
     AssignmentMatrix, hopgnn_assignment, lo_assignment,
     model_centric_assignment,
 )
-from repro.core.pregather import GatherPlan, build_gather_plan, workspace_indices
+from repro.core.pregather import (GatherPlan, PlanOverflow, build_gather_plan,
+                                  workspace_indices)
 
 Strategy = Literal["model_centric", "hopgnn", "lo"]
 
@@ -152,7 +154,7 @@ def plan_iteration(graph: CSRGraph,
     if batch_pad is None:
         batch_pad = max(1, int(counts.max()))
     if counts.max() > batch_pad:
-        raise ValueError(f"batch_pad {batch_pad} < max group {counts.max()}")
+        raise PlanOverflow("batch_pad", int(counts.max()), int(batch_pad))
 
     # ---- sample one padded TreeBlock per (shard, step) ----
     blocks: list[list[TreeBlock]] = []          # [s][t]
@@ -204,7 +206,9 @@ def plan_iteration(graph: CSRGraph,
                       for t in range(T)]
         r_max_eff = r_max or max(p.r_max for p in step_plans)
         if any(p.req_count.max() > r_max_eff for p in step_plans):
-            raise ValueError("per-step pregather overflow")
+            raise PlanOverflow(
+                "r_max", int(max(p.req_count.max() for p in step_plans)),
+                int(r_max_eff))
         step_req = np.zeros((n, T, n, r_max_eff), np.int32)
         for t, p in enumerate(step_plans):
             if p.r_max != r_max_eff:   # rebuild with the common r_max

@@ -1,5 +1,10 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+if __name__ == "__main__":
+    # Script-only: force 512 placeholder host devices BEFORE jax backend
+    # init. Must not run on import — tests import this module for
+    # collective_bytes, and a process-wide XLA_FLAGS poisons every other
+    # test's device count.
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 """Multi-pod dry-run: lower + compile every (arch × input shape × mesh).
 

@@ -1,5 +1,7 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+if __name__ == "__main__":
+    # Script-only (see dryrun.py): never set XLA_FLAGS on plain import.
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 """GNN-side dry-run: lower + compile the HopGNN shard_map iteration on the
 production data mesh (256 shards single-pod / 512 two-pod).
@@ -62,12 +64,14 @@ def main() -> None:
         weights=jax.ShapeDtypeStruct((n, T, bp), jnp.float32),
     )
 
-    fn = make_sharded_iteration(cfg, pregather=True,
-                                global_batch=bp * n, mesh=mesh)
-    lowered = fn.lower(params, table, dev)
+    fn = make_sharded_iteration(cfg, pregather=True, mesh=mesh)
+    denom = jax.ShapeDtypeStruct((), jnp.float32)
+    lowered = fn.lower(params, table, dev, denom)
     compiled = lowered.compile()
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, list):        # older jax: one dict per computation
+        cost = cost[0] if cost else {}
     coll = collective_bytes(compiled.as_text())
     rec = {
         "kind": "hopgnn_gnn_iteration",

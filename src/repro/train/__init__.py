@@ -1,0 +1,12 @@
+"""repro.train — compile-once training loop for the LeapGNN engine.
+
+Shape budgets (quantized device shapes), a prefetching double-buffered
+planner, the §5.3 merging controller with a compile-free timing signal,
+eval, and checkpoint/resume — one Trainer instead of per-file hand-rolled
+epoch loops. See loop.py for the design notes.
+"""
+from repro.train.budget import ShapeBudget, next_bucket
+from repro.train.loop import EpochStats, Trainer, merging_walk
+
+__all__ = ["ShapeBudget", "next_bucket", "EpochStats", "Trainer",
+           "merging_walk"]

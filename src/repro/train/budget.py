@@ -1,0 +1,93 @@
+"""Shape budgets: quantized device shapes for a compile-once hot path.
+
+The planner (repro.core.strategies) emits rectangular arrays sized to the
+*exact* needs of one iteration — ``batch_pad`` to the largest root group,
+``r_max`` to the largest per-peer fetch. Exact sizes differ between
+iterations, so every plan used to carry fresh device shapes and the jitted
+iteration retraced on nearly every step; epoch wall-times then measured XLA
+compilation rather than execution (the bug the merging controller's timing
+signal inherited).
+
+A :class:`ShapeBudget` fixes ``batch_pad``/``r_max`` per run instead: sizes
+are quantized to power-of-two buckets learned from the first plan, every
+subsequent plan is forced into the same bucket (padding roots are local and
+zero-weighted; padded request slots fetch row 0 and are never read, so
+numerics are unchanged — see the budgeted-gradient-parity test), and an
+overflow re-buckets explicitly to the next power of two. One bucket ⇒ one
+jit trace; re-buckets are counted and visible.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+def next_bucket(n: int, minimum: int = 1) -> int:
+    """Smallest power of two ≥ max(n, minimum, 1)."""
+    n = max(int(n), int(minimum), 1)
+    return 1 << (n - 1).bit_length()
+
+
+@dataclasses.dataclass
+class ShapeBudget:
+    """Per-run quantized sizes for the planner's rectangular arrays.
+
+    ``batch_pad``/``r_max`` of 0 mean "not yet learned": the first
+    :meth:`plan` call probes exact sizes and buckets them (never below the
+    ``min_*`` floors, which give headroom against immediate re-bucketing).
+    """
+
+    batch_pad: int = 0
+    r_max: int = 0
+    min_batch_pad: int = 8
+    min_r_max: int = 8
+    max_rebuckets: int = 8
+    # --- counters (observability; the compile-once tests read these) ---
+    rebuckets: int = 0
+    plans_built: int = 0
+
+    def signature(self) -> tuple[int, int]:
+        return (self.batch_pad, self.r_max)
+
+    def grow(self, field: str, needed: int) -> None:
+        """Explicit overflow re-bucketing: jump to the next power-of-two
+        bucket that fits ``needed`` (strictly larger than the current one)."""
+        self.rebuckets += 1
+        if field == "batch_pad":
+            self.batch_pad = next_bucket(needed, self.batch_pad + 1)
+        elif field == "r_max":
+            self.r_max = next_bucket(needed, self.r_max + 1)
+        else:
+            raise ValueError(f"unknown budget field {field!r}")
+
+    def plan(self, planner=None, **plan_kwargs):
+        """Build an IterationPlan under this budget (bucketed shapes).
+
+        ``planner`` defaults to :func:`repro.core.plan_iteration`; any
+        callable with the same keyword contract (and raising
+        :class:`repro.core.PlanOverflow` on overflow) works.
+        """
+        from repro.core.pregather import PlanOverflow
+        if planner is None:
+            from repro.core.strategies import plan_iteration as planner
+        if not (self.batch_pad and self.r_max):
+            # First call: probe exact sizes once, then bucket. The probe is
+            # host-side numpy only — it never touches the device engine, so
+            # it costs one extra planning pass on iteration 0 and nothing
+            # after.
+            probe = planner(**plan_kwargs)
+            self.batch_pad = max(self.batch_pad,
+                                 next_bucket(probe.batch_pad,
+                                             self.min_batch_pad))
+            self.r_max = max(self.r_max,
+                             next_bucket(probe.r_max, self.min_r_max))
+        for _ in range(self.max_rebuckets + 1):
+            try:
+                out = planner(**plan_kwargs, batch_pad=self.batch_pad,
+                              r_max=self.r_max)
+                self.plans_built += 1
+                return out
+            except PlanOverflow as e:
+                self.grow(e.field, e.needed)
+        raise RuntimeError(
+            f"shape budget failed to converge after {self.max_rebuckets} "
+            f"re-buckets (batch_pad={self.batch_pad}, r_max={self.r_max})")

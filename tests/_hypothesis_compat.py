@@ -1,0 +1,44 @@
+"""Optional-import shim for ``hypothesis``.
+
+The container image does not ship hypothesis; a hard import made three test
+modules error at *collection*, taking every example-based test in them down
+too. Import ``given``/``settings``/``st`` from here instead: with
+hypothesis installed the real objects pass through untouched; without it,
+``@given`` rewrites the property test into a zero-argument test that skips
+cleanly, and ``st``/``settings`` become inert stand-ins so module-level
+strategy expressions still evaluate.
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Absorbs any strategy constructor / combinator call."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    st = _AnyStrategy()
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            # A fresh zero-arg function (no __wrapped__): pytest must not
+            # mistake the property-test's strategy parameters for fixtures.
+            def _skipped():
+                pytest.skip("hypothesis not installed (property test)")
+            _skipped.__name__ = fn.__name__
+            _skipped.__doc__ = fn.__doc__
+            return _skipped
+        return deco

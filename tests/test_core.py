@@ -4,7 +4,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import plan_iteration, run_iteration, MergingController
 from repro.core.comm_model import (ModelSpec, alpha_ratio, hopgnn_bytes,
@@ -155,6 +155,29 @@ def test_merge_min_step_conserves_roots(partitioned):
                                   merged.model_step_counts().sum(0))
 
 
+def test_merge_min_step_dedupes_duplicate_target_slots():
+    """A model with several groups at one (server, step) slot — the normal
+    state after a previous merge round — must count that slot once when the
+    folded roots are redistributed, or array_split over-weights it."""
+    from repro.core.micrograph import AssignmentMatrix
+    groups = {
+        (0, 0): [(0, np.arange(0, 3)), (0, np.arange(3, 6))],  # dup slot
+        (1, 1): [(0, np.arange(6, 9))],
+        (0, 2): [(0, np.arange(9, 13))],                       # folded step
+    }
+    amat = AssignmentMatrix(num_shards=2, num_steps=3, groups=groups)
+    merged = merge_min_step(amat, ts_min=2)
+    assert merged.num_steps == 2
+    # exact conservation of the model's roots
+    got = np.sort(np.concatenate(
+        [r for gs in merged.groups.values() for _, r in gs]))
+    np.testing.assert_array_equal(got, np.arange(13))
+    # even redistribution over the two *distinct* slots: 2 roots each
+    # (the duplicated (0,0) slot previously got 3 of the 4)
+    assert merged.roots_at(0, 0).size == 6 + 2
+    assert merged.roots_at(1, 1).size == 3 + 2
+
+
 def test_merging_controller_freezes_on_regression():
     roots = [np.arange(8) * 4 + i for i in range(4)]
     part = np.arange(64) % 4
@@ -168,6 +191,22 @@ def test_merging_controller_freezes_on_regression():
     assert ctl.frozen
     assert ctl.assignment_for_epoch().num_steps == s1  # pre-regression wins
     assert s2 == s1 - 1
+
+
+def test_micrograph_locality_stats_per_root_home():
+    """Locality must be scored against each root's own home server, not the
+    first root's: a 2-root block whose subtrees are each fully local to
+    their own root is 100 % local."""
+    from repro.core.micrograph import micrograph_locality_stats
+    part = np.array([0, 0, 1, 1])
+    hops = [np.array([0, 2]),              # roots homed at 0 and 1
+            np.array([0, 1, 2, 3])]        # each root's children all local
+    local, remote = micrograph_locality_stats([hops], part)
+    assert local == 1.0 and remote == 0.0
+    # mixed case: root 1's children live on server 0 -> half remote
+    hops2 = [np.array([0, 2]), np.array([0, 1, 0, 1])]
+    local2, remote2 = micrograph_locality_stats([hops2], part)
+    assert local2 == 0.5 and remote2 == 0.5
 
 
 # ---------------------------------------------------------------------------

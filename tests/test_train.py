@@ -1,0 +1,202 @@
+"""repro.train: compile-once invariant (trace counting), shape-budget
+gradient parity, merging-pattern application, and checkpoint/resume."""
+import numpy as np
+import jax
+import pytest
+
+from repro.core import distributed as engine
+from repro.core import plan_iteration, run_iteration
+from repro.models.gnn import GNNConfig, init_gnn
+from repro.optim import adam
+from repro.train import ShapeBudget, Trainer, next_bucket
+
+
+def _cfg(d, model="sage"):
+    return GNNConfig(model=model, num_layers=2, hidden_dim=16,
+                     feature_dim=d["ds"].feature_dim,
+                     num_classes=d["ds"].num_classes, fanout=4)
+
+
+def _trainer(d, cfg, **kw):
+    kw.setdefault("optimizer", adam(5e-3))
+    kw.setdefault("merging", False)
+    kw.setdefault("train_vertices", d["ds"].train_vertices())
+    return Trainer(graph=d["ds"].graph, labels=d["ds"].labels,
+                   part=d["part"], owner=d["owner"],
+                   local_idx=d["local_idx"], table=d["table"], cfg=cfg, **kw)
+
+
+def _plan_kwargs(d, roots, **kw):
+    out = dict(graph=d["ds"].graph, labels=d["ds"].labels, part=d["part"],
+               owner=d["owner"], local_idx=d["local_idx"],
+               local_rows=d["table"].shape[1], roots_per_model=roots,
+               num_layers=2, fanout=4, strategy="hopgnn", sample_seed=7)
+    out.update(kw)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Shape budget
+# ---------------------------------------------------------------------------
+
+def test_next_bucket_quantization():
+    assert [next_bucket(n) for n in (1, 2, 3, 4, 5, 9, 64, 65)] == \
+        [1, 2, 4, 4, 8, 16, 64, 128]
+    assert next_bucket(3, minimum=8) == 8
+
+
+def test_budget_grow_is_explicit_and_counted():
+    b = ShapeBudget(batch_pad=8, r_max=8)
+    b.grow("batch_pad", 9)
+    b.grow("r_max", 100)
+    assert (b.batch_pad, b.r_max) == (16, 128)
+    assert b.rebuckets == 2
+    with pytest.raises(ValueError):
+        b.grow("nope", 1)
+
+
+def test_budget_learns_pow2_buckets(partitioned):
+    d = partitioned
+    rng = np.random.default_rng(0)
+    tv = d["ds"].train_vertices()
+    roots = [rng.choice(tv, 12, replace=False) for _ in range(d["parts"])]
+    budget = ShapeBudget()
+    plan = budget.plan(**_plan_kwargs(d, roots))
+    assert plan.batch_pad == budget.batch_pad
+    assert plan.r_max == budget.r_max
+    assert budget.batch_pad & (budget.batch_pad - 1) == 0   # power of two
+    assert budget.r_max & (budget.r_max - 1) == 0
+
+
+# ---------------------------------------------------------------------------
+# Compile-once invariant (the tentpole regression test)
+# ---------------------------------------------------------------------------
+
+def test_trace_once_per_shape_bucket(partitioned):
+    """≥3 iterations with varying true batch (and hence remote-fetch)
+    counts must trace the iteration function exactly once: one shape
+    bucket ⇒ one jit trace."""
+    engine.clear_compile_cache()
+    d = partitioned
+    cfg = _cfg(d)
+    tv = d["ds"].train_vertices()
+    sizes = [12, 7, 10, 9]        # first iteration carries the largest batch
+
+    def root_fn(epoch, it):
+        rng = np.random.default_rng(100 * epoch + it)
+        return [rng.choice(tv, sizes[it], replace=False)
+                for _ in range(d["parts"])]
+
+    tr = _trainer(d, cfg, root_fn=root_fn, prefetch=False)
+    t0 = engine.trace_count()
+    tr.fit(epochs=1, iters_per_epoch=4)
+    assert tr.budget.rebuckets == 0
+    assert engine.trace_count() - t0 == 1, engine.trace_log()[-4:]
+
+
+def test_no_new_traces_after_first_epoch(partitioned):
+    """Acceptance: a multi-epoch run with an unchanged merge pattern does
+    all its tracing in epoch 0; epochs ≥1 are compile-free and therefore
+    much faster in the same process."""
+    engine.clear_compile_cache()
+    d = partitioned
+    tr = _trainer(d, _cfg(d))
+    stats = tr.fit(epochs=3, iters_per_epoch=3, batch_per_model=8)
+    assert stats[0].traces >= 1
+    assert stats[1].traces == 0 and stats[2].traces == 0
+    assert stats[1].time_s < stats[0].time_s
+    assert stats[2].time_s < stats[0].time_s
+
+
+def test_merging_pattern_reaches_device(partitioned):
+    """The controller's merge pattern must change the *executed* plan (the
+    seed loop silently re-planned the unmerged rotation), and each pattern
+    change costs at most the traces of one new shape bucket."""
+    engine.clear_compile_cache()
+    d = partitioned
+    tr = _trainer(d, _cfg(d), merging=True)
+    stats = tr.fit(epochs=3, iters_per_epoch=4, batch_per_model=8)
+    assert stats[0].num_steps == d["parts"]
+    # epoch 0 must yield a compile-free sample for the controller to act on
+    assert stats[0].compile_free
+    # first record_epoch_time always proposes one merge (§5.3 examination)
+    assert stats[1].num_steps == stats[0].num_steps - 1
+    assert tr.controller is not None and len(tr.controller.history) >= 2
+
+
+# ---------------------------------------------------------------------------
+# Budgeted-plan gradient parity
+# ---------------------------------------------------------------------------
+
+def test_budgeted_plan_gradient_parity(partitioned):
+    """Padding to the bucket (weight-0 roots, never-read request slots)
+    must not change numerics: identical loss, gradients equal to float
+    accumulation-order noise."""
+    d = partitioned
+    cfg = _cfg(d)
+    params = init_gnn(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(3)
+    tv = d["ds"].train_vertices()
+    roots = [rng.choice(tv, 11, replace=False) for _ in range(d["parts"])]
+
+    exact = plan_iteration(**_plan_kwargs(d, roots))
+    budgeted = ShapeBudget().plan(**_plan_kwargs(d, roots))
+    assert budgeted.batch_pad > exact.batch_pad       # really padded
+    assert budgeted.global_batch == exact.global_batch
+
+    ge, le = run_iteration(params, d["table"], exact, cfg)
+    gb, lb = run_iteration(params, d["table"], budgeted, cfg)
+    assert float(le) == float(lb)                     # bit-identical loss
+    for a, b in zip(jax.tree.leaves(ge), jax.tree.leaves(gb)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=2e-8)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint / resume
+# ---------------------------------------------------------------------------
+
+def test_trainer_checkpoint_resume_matches_straight_run(partitioned,
+                                                        tmp_path):
+    d = partitioned
+    cfg = _cfg(d)
+    ck = str(tmp_path / "ck")
+
+    tr1 = _trainer(d, cfg, ckpt_dir=ck, root_seed=5)
+    tr1.fit(epochs=2, iters_per_epoch=2, batch_per_model=8)
+
+    tr2 = _trainer(d, cfg, ckpt_dir=ck, root_seed=5)
+    stats = tr2.fit(epochs=3, iters_per_epoch=2, batch_per_model=8,
+                    resume=True)
+    assert [s.epoch for s in stats] == [2]            # epochs 0-1 skipped
+    assert tr2.global_step == 6
+
+    tr3 = _trainer(d, cfg, root_seed=5)               # no checkpointing
+    tr3.fit(epochs=3, iters_per_epoch=2, batch_per_model=8)
+    for a, b in zip(jax.tree.leaves(tr2.params), jax.tree.leaves(tr3.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_controller_restore_keeps_examination_baseline():
+    """A resumed controller must compare against the pre-resume epoch time
+    (no unconditional merge) and must still be able to revert the last
+    merge on regression."""
+    from repro.core import MergingController
+    from repro.core.micrograph import hopgnn_assignment
+    roots = [np.arange(8) * 4 + i for i in range(4)]
+    part = (np.arange(64) % 4).astype(np.int32)
+    base = hopgnn_assignment(roots, part)
+
+    ctl = MergingController(base=base)
+    ctl.restore(num_steps=3, frozen=False, last_time=8.0)
+    assert ctl.pattern_steps == 3 and not ctl.frozen
+    ctl.record_epoch_time(9.0)        # regression vs restored baseline
+    assert ctl.frozen
+    assert ctl.pattern_steps == 4     # reverted the pre-resume merge
+
+
+def test_trainer_eval_uses_sharded_table(partitioned):
+    d = partitioned
+    tr = _trainer(d, _cfg(d))
+    acc = tr.evaluate(n_eval=64)
+    assert 0.0 <= acc <= 1.0
