@@ -3,7 +3,7 @@
 PYTHON ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test test-all bench-smoke train-smoke
+.PHONY: test test-all bench-smoke bench-plan train-smoke
 
 # Fast lane (tier-1): everything except @pytest.mark.slow (pyproject default)
 test:
@@ -16,6 +16,11 @@ test-all:
 # Quick pass over every benchmark suite (ratios, 1-CPU-core scales)
 bench-smoke:
 	$(PYTHON) -m benchmarks.run
+
+# Host-planner microbenchmark: legacy vs vectorized plan construction
+# (writes BENCH_planning.json at the repo root)
+bench-plan:
+	$(PYTHON) -m benchmarks.planning
 
 # 3-epoch compile-once smoke train (prints first vs steady epoch times)
 train-smoke:

@@ -8,6 +8,7 @@ quantities — see DESIGN.md §2).
 """
 from __future__ import annotations
 
+import json
 import time
 from pathlib import Path
 
@@ -47,6 +48,19 @@ class Bench:
             f.write("benchmark,case,metric,value\n")
             for r in self.rows:
                 f.write(",".join(str(x) for x in r) + "\n")
+
+    def save_json(self, path: Path | None = None) -> Path:
+        """Write BENCH_<name>.json at the repo root: the machine-readable
+        bench trajectory ({case: {metric: value}}) CI and the driver read."""
+        out: dict = {}
+        for _, case, metric, value in self.rows:
+            out.setdefault(case, {})[metric] = value
+        path = path or (Path(__file__).resolve().parents[1]
+                        / f"BENCH_{self.name}.json")
+        with open(path, "w") as f:
+            json.dump({"benchmark": self.name, "results": out}, f,
+                      indent=2, sort_keys=True)
+        return path
 
 
 def setup(dataset="products", scale=0.02, parts=4, partitioner="community",

@@ -147,6 +147,7 @@ def run(quick=True):
     b.emit("summary", "hopgnn_beats_naive_everywhere",
            int(all(v["naive"] > 1 for v in speedups.values())))
     b.save_csv()
+    b.save_json()
     return b.rows
 
 

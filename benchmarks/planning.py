@@ -1,0 +1,104 @@
+"""Host-planner microbenchmark: legacy (per-vertex Python) vs vectorized
+plan construction across shard counts.
+
+Plan construction is the host-side half of LeapGNN's pre-gathering (§5.2):
+dedup every shard's remote-vertex set, lay the fetches out per peer
+(``build_gather_plan``), and translate every tree-block hop's global ids to
+workspace slots (``workspace_indices``). The seed implementation did this
+with per-vertex dict inserts and list-comprehension lookups; the vectorized
+planner is one ``np.unique`` over a combined (shard, peer, id) key plus
+SlotMap gathers. This benchmark times both on the same sampled tree blocks
+— sampling itself is excluded; it is identical work on both sides — and
+writes the machine-readable trajectory to ``BENCH_planning.json``.
+
+Acceptance gate: ≥ 10× at 8+ shards (``speedup`` metric, case ``n8``).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Bench, setup
+from repro.core.pregather import (_reference_build_gather_plan,
+                                  _reference_workspace_indices,
+                                  build_gather_plan, workspace_indices)
+from repro.graph.sampler import sample_tree_block
+
+# the paper's standard suite is 3-layer fanout-10 (benchmarks/common.py)
+FANOUT = 10
+NUM_LAYERS = 3
+
+
+def _sample_workload(env, n: int, roots_per_step: int, seed: int = 0):
+    """One iteration's tree blocks: n shards × T=n rotation steps."""
+    rng = np.random.default_rng(seed)
+    tv = env["ds"].train_vertices()
+    blocks = [[sample_tree_block(env["ds"].graph,
+                                 rng.choice(tv, roots_per_step,
+                                            replace=False),
+                                 NUM_LAYERS, FANOUT, seed=7)
+               for _ in range(n)] for _ in range(n)]          # [s][t]
+    needed = [np.concatenate([blk.all_ids() for blk in row])
+              for row in blocks]
+    return blocks, needed
+
+
+def _time(fn, iters: int) -> float:
+    fn()                                   # warmup (page-in, allocator)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters
+
+
+def run(quick=True):
+    b = Bench("planning")
+    shard_counts = (4, 8) if quick else (4, 8, 16)
+    roots = 96 if quick else 256
+    iters = 2 if quick else 3
+    speedups = {}
+    for n in shard_counts:
+        env = setup(dataset="products", scale=0.15, parts=n)
+        blocks, needed = _sample_workload(env, n, roots)
+        owner, local_idx = env["owner"], env["local_idx"]
+        local_rows = env["table"].shape[1]
+
+        def plan_with(build, translate):
+            plan = build(needed, owner, local_idx, n, local_rows)
+            for s in range(n):
+                for t in range(n):
+                    translate(blocks[s][t].hops, s, owner, local_idx, plan)
+            return plan
+
+        t_vec = _time(lambda: plan_with(build_gather_plan,
+                                        workspace_indices), iters)
+        t_ref = _time(lambda: plan_with(_reference_build_gather_plan,
+                                        _reference_workspace_indices), iters)
+        # parity spot-check rides along: same req/counts both ways
+        pv = plan_with(build_gather_plan, workspace_indices)
+        pr = plan_with(_reference_build_gather_plan,
+                       _reference_workspace_indices)
+        np.testing.assert_array_equal(pv.req, pr.req)
+        np.testing.assert_array_equal(pv.req_count, pr.req_count)
+
+        case = f"n{n}"
+        sp = t_ref / t_vec
+        speedups[n] = sp
+        b.emit(case, "legacy_ms", round(1000 * t_ref, 1))
+        b.emit(case, "vectorized_ms", round(1000 * t_vec, 1))
+        b.emit(case, "speedup", round(sp, 1))
+        b.emit(case, "remote_rows", pv.remote_rows_exact())
+        b.emit(case, "translated_ids", sum(
+            sum(h.size for h in blocks[s][t].hops)
+            for s in range(n) for t in range(n)))
+    gate_n = max(k for k in speedups if k >= 8)
+    b.emit("summary", "speedup_at_8plus_shards", round(speedups[gate_n], 1))
+    b.emit("summary", "meets_10x_gate", int(speedups[gate_n] >= 10))
+    b.save_csv()
+    b.save_json()
+    return b.rows
+
+
+if __name__ == "__main__":
+    run()

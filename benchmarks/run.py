@@ -14,7 +14,7 @@ import traceback
 
 
 SUITES = ["alpha", "locality", "comm_volume", "end_to_end", "ablation",
-          "merging", "sensitivity", "accuracy", "roofline"]
+          "merging", "sensitivity", "accuracy", "roofline", "planning"]
 
 
 def main() -> None:

@@ -66,18 +66,36 @@ class ShardComm:
     def __init__(self, axis: str = "data"):
         self.axis = axis
 
+    def exchange_indices(self, req: jnp.ndarray) -> jnp.ndarray:
+        """req: (P, r_max) peer-local indices I want. Returns (P, r_max):
+        row p = indices peer p wants from me."""
+        return jax.lax.all_to_all(req, self.axis, split_axis=0,
+                                  concat_axis=0, tiled=True)
+
+    def exchange_indices_batched(self, step_req: jnp.ndarray) -> jnp.ndarray:
+        """step_req: (T, P, r_max) — all T per-step index requests in ONE
+        all_to_all (split/concat over the peer axis). Returns (T, P, r_max):
+        ``out[t, p]`` = indices peer p wants from me at step t. Hoisting
+        this ahead of the time-step scan halves the per-step collective
+        count: the scan body only ships features back (T+1 all_to_alls per
+        iteration instead of 2T)."""
+        return jax.lax.all_to_all(step_req, self.axis, split_axis=1,
+                                  concat_axis=1, tiled=True)
+
+    def serve_features(self, table: jnp.ndarray,
+                       incoming: jnp.ndarray) -> jnp.ndarray:
+        """table: (local_rows, d); incoming: (P, r_max) indices each peer
+        wants from me. Serves them from the local shard and ships features
+        back; returns (P, r_max, d): row p = rows fetched from peer p."""
+        served = jnp.take(table, incoming.reshape(-1), axis=0)
+        served = served.reshape(incoming.shape[0], incoming.shape[1], -1)
+        return jax.lax.all_to_all(served, self.axis, split_axis=0,
+                                  concat_axis=0, tiled=True)
+
     def exchange(self, table: jnp.ndarray, req: jnp.ndarray) -> jnp.ndarray:
         """table: (local_rows, d); req: (P, r_max) peer-local indices.
         Returns (P, r_max, d): row p = rows fetched from peer p."""
-        # 1) ship requests: row p of `incoming` = indices peer p wants from me
-        incoming = jax.lax.all_to_all(req, self.axis, split_axis=0,
-                                      concat_axis=0, tiled=True)
-        # 2) serve them from the local shard
-        served = jnp.take(table, incoming.reshape(-1), axis=0)
-        served = served.reshape(incoming.shape[0], incoming.shape[1], -1)
-        # 3) ship features back
-        return jax.lax.all_to_all(served, self.axis, split_axis=0,
-                                  concat_axis=0, tiled=True)
+        return self.serve_features(table, self.exchange_indices(req))
 
     def grad_mean(self, grads, denom: float):
         return jax.tree.map(lambda g: jax.lax.psum(g, self.axis) / denom, grads)
@@ -101,6 +119,26 @@ class EmulatedComm:
             return jnp.take(table_p, req_sp, axis=0)          # (N, r_max, d)
         out = jax.vmap(per_peer, in_axes=(0, 1), out_axes=1)(table_g, req_g)
         return out
+
+    def exchange_indices_batched_global(self, step_req_g: jnp.ndarray
+                                        ) -> jnp.ndarray:
+        """Emulated analogue of ShardComm.exchange_indices_batched.
+        step_req_g: (N, T, P, r_max). Returns (N, T, P, r_max) in the
+        *server* view: out[m, t, p] = step_req_g[p, t, m] — the indices
+        peer p wants from shard m at step t. A pure transpose: on one
+        device the index exchange is data movement only."""
+        return jnp.transpose(step_req_g, (2, 1, 0, 3))
+
+    def serve_step_global(self, table_g: jnp.ndarray, incoming_g: jnp.ndarray,
+                          t, shard: int) -> jnp.ndarray:
+        """Feature return for requesting ``shard`` at step ``t``.
+        incoming_g: (N, T, P, r_max) server-view indices (see above).
+        Returns (P, r_max, d): row p = table_g[p][incoming_g[p, t, shard]]
+        — bit-identical to the per-step exchange_global slice."""
+        idx = incoming_g[:, t, shard]                         # (P, r_max)
+        def per_peer(table_p, idx_p):                         # (rows,d), (r,)
+            return jnp.take(table_p, idx_p, axis=0)
+        return jax.vmap(per_peer)(table_g, idx)               # (P, r_max, d)
 
     def grad_mean_global(self, grads_g, denom: float):
         return jax.tree.map(lambda g: jnp.sum(g, axis=0) / denom, grads_g)
@@ -149,9 +187,12 @@ def _iteration_shard(params, table, dev, cfg: GNNConfig, pregather: bool,
         ws = jnp.concatenate([table, recv.reshape(-1, table.shape[1])], 0)
         workspace_fn = lambda t: ws
     else:
-        step_req = dev["step_req"]                          # (T, P, r_max)
+        # All T index requests ship in one batched all_to_all before the
+        # time-step scan; the scan body then only pays the feature-return
+        # collective — T+1 all_to_alls per iteration instead of 2T.
+        incoming = comm.exchange_indices_batched(dev["step_req"])
         def workspace_fn(t):
-            recv = comm.exchange(table, step_req[t])
+            recv = comm.serve_features(table, incoming[t])
             return jnp.concatenate([table, recv.reshape(-1, table.shape[1])], 0)
     grads, loss_sum = _shard_grads(params, cfg, workspace_fn,
                                    dev["hop_idx"], dev["labels"], dev["weights"])
@@ -267,6 +308,51 @@ def _build_sharded(cfg: GNNConfig, pregather: bool, mesh: Mesh, axis: str):
     return jax.jit(shmapped)
 
 
+def collective_counts(fn, *args) -> dict:
+    """Count collective *executions* in one call of ``fn(*args)``.
+
+    Traces ``fn`` to a jaxpr and walks it recursively, multiplying any
+    collective found inside a ``scan`` body by the scan trip count — so an
+    all_to_all inside the time-step loop counts T times, one hoisted ahead
+    of it counts once. This is the acceptance metric for the batched
+    per-step exchange: per-step mode must run exactly T+1 all_to_alls per
+    iteration (T feature returns + 1 batched index exchange), pregather
+    mode exactly 2.
+    """
+    closed = jax.make_jaxpr(fn)(*args)
+    counts: dict = {}
+    _count_collectives(closed.jaxpr, 1, counts)
+    return counts
+
+
+_COLLECTIVE_PRIMS = ("all_to_all", "psum", "pmean", "all_gather",
+                     "reduce_scatter", "ppermute")
+
+
+def _count_collectives(jaxpr, mult: int, counts: dict) -> None:
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name in _COLLECTIVE_PRIMS:
+            counts[name] = counts.get(name, 0) + mult
+        sub_mult = mult * int(eqn.params["length"]) if name == "scan" else mult
+        for v in eqn.params.values():
+            for sub in _subjaxprs(v):
+                _count_collectives(sub, sub_mult, counts)
+
+
+def _subjaxprs(v):
+    from jax.extend import core as jex_core  # jax.core aliases, 0.4-compat
+    ClosedJaxpr = getattr(jex_core, "ClosedJaxpr", None) or jax.core.ClosedJaxpr
+    Jaxpr = getattr(jex_core, "Jaxpr", None) or jax.core.Jaxpr
+    if isinstance(v, ClosedJaxpr):
+        yield v.jaxpr
+    elif isinstance(v, Jaxpr):
+        yield v
+    elif isinstance(v, (list, tuple)):
+        for w in v:
+            yield from _subjaxprs(w)
+
+
 def _build_emulated(cfg: GNNConfig, pregather: bool):
     def body(params, table_g, dev, denom):
         _note_trace("emulated", cfg, pregather, table_g, dev)
@@ -281,6 +367,10 @@ def _emulated_iteration(params, table_g, dev, denom, cfg: GNNConfig,
     n = table_g.shape[0]
     if pregather:
         recv_g = ecomm.exchange_global(table_g, dev["req"])   # (N,P,r,d)
+    else:
+        # index exchange hoisted ahead of the scan, mirroring ShardComm's
+        # batched collective (here a pure transpose — same data movement)
+        incoming_g = ecomm.exchange_indices_batched_global(dev["step_req"])
     per_shard = []
     for s in range(n):
         if pregather:
@@ -289,9 +379,7 @@ def _emulated_iteration(params, table_g, dev, denom, cfg: GNNConfig,
             workspace_fn = lambda t, ws=ws: ws
         else:
             def workspace_fn(t, s=s):
-                # step exchange for shard s at step t: needs global tables
-                req_t = dev["step_req"][:, t]                  # (N, P, r)
-                recv = ecomm.exchange_global(table_g, req_t)[s]
+                recv = ecomm.serve_step_global(table_g, incoming_g, t, s)
                 return jnp.concatenate(
                     [table_g[s], recv.reshape(-1, table_g.shape[-1])], 0)
         hop_idx = [h[s] for h in dev["hop_idx"]]

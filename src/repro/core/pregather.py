@@ -10,6 +10,15 @@ The exchange plan is expressed as TPU-friendly rectangular arrays:
 padded with 0; true counts ride along for exact byte accounting. The device
 engine turns this into two ``all_to_all`` collectives (indices out,
 features back) — the SPMD analogue of LeapGNN's batched gRPC fetch.
+
+Planner hot path: plan construction is fully vectorized numpy — one
+``np.unique`` over a flat ``(shard, id)`` key dedups every shard at once,
+``bincount``/``lexsort`` produce the per-(shard, peer) layout, and the
+global-id → workspace-slot translation is a :class:`SlotMap`
+(``searchsorted`` over per-shard sorted id segments) instead of the
+original per-vertex Python dicts. The reference implementation is kept as
+:func:`_reference_build_gather_plan` / :func:`_reference_workspace_indices`
+and the parity tests assert the two agree exactly.
 """
 from __future__ import annotations
 
@@ -33,6 +42,119 @@ class PlanOverflow(ValueError):
         self.limit = int(limit)
 
 
+# Above this many vertices the per-shard dense translation cache is not
+# built (memory guard: one int64 row of ``num_vertices`` per shard) and
+# lookups stay on the searchsorted path.
+_DENSE_LUT_MAX_VERTICES = 64_000_000
+
+# The planner dedups via an (N, V) presence bitmap — O(ids + N·V) — when it
+# fits this many cells (bool bytes) AND the id volume justifies the O(N·V)
+# bitmap scan (see _use_bitmap_dedup); otherwise it falls back to the
+# sort-based O(ids log ids) path. Tree-block id streams repeat heavily
+# (fanout trees share neighbors), so the bitmap wins on dense workloads.
+_DENSE_DEDUP_MAX_CELLS = 1 << 28
+
+
+def _use_bitmap_dedup(n: int, V: int, total_ids: int) -> bool:
+    """Bitmap dedup only when its O(n·V) scan is cheap in absolute terms
+    or amortized by the id volume — a per-step plan with a few thousand
+    ids on a 30M-vertex graph must not pay a 240MB bitmap per call."""
+    cells = n * V
+    if not 0 < cells <= _DENSE_DEDUP_MAX_CELLS:
+        return False
+    return cells <= (1 << 22) or cells <= total_ids * 16
+
+
+@dataclasses.dataclass
+class SlotMap:
+    """Vectorized global-vertex-id → workspace-slot translation.
+
+    Layout: the remote ids of all requesting shards live in one flat array,
+    segmented per shard by ``starts`` (CSR-style offsets, length N+1).
+    Within a shard's segment ``ids[starts[s]:starts[s+1]]`` is sorted
+    ascending, so a lookup is ``searchsorted`` into the segment — O(log n)
+    per query, fully vectorized over query batches, zero per-element Python.
+    ``slots`` is aligned with ``ids`` and holds each id's workspace row.
+
+    Hot-path cache: ``workspace_indices`` queries the same shard T × hops
+    times per plan, so :meth:`translation_row` materializes one dense
+    int32 ``num_vertices``-sized row per shard (local row index or remote
+    slot at index v, -1 elsewhere) and every hop translation is a single
+    gather. The cache is skipped above ``_DENSE_LUT_MAX_VERTICES`` (memory
+    guard) or when ``num_vertices`` is unknown; the searchsorted
+    :meth:`lookup` path is always valid.
+    """
+
+    starts: np.ndarray   # (N+1,) int64 — per-shard segment offsets
+    ids: np.ndarray      # (M,) int64 — remote global ids, sorted per segment
+    slots: np.ndarray    # (M,) int64 — workspace slot of ids[k]
+    num_vertices: int = 0   # global id space size (0 = unknown, no cache)
+
+    def __post_init__(self):
+        self._trans: dict[int, np.ndarray] = {}
+
+    @property
+    def num_shards(self) -> int:
+        return self.starts.size - 1
+
+    def shard_ids(self, shard: int) -> np.ndarray:
+        """Sorted remote global ids shard ``shard`` fetches."""
+        return self.ids[self.starts[shard]:self.starts[shard + 1]]
+
+    def shard_slots(self, shard: int) -> np.ndarray:
+        """Workspace slots aligned with :meth:`shard_ids`."""
+        return self.slots[self.starts[shard]:self.starts[shard + 1]]
+
+    def cached_translation_row(self, shard: int) -> np.ndarray | None:
+        """The shard's dense translation row if already built, else None —
+        lets callers reuse a paid-for row even when the current query
+        volume alone wouldn't justify building one."""
+        return self._trans.get(shard)
+
+    def translation_row(self, shard: int, owner: np.ndarray,
+                        local_idx: np.ndarray) -> np.ndarray | None:
+        """Full per-shard translation row: ``row[v]`` = workspace slot of
+        global id v on ``shard`` — ``local_idx[v]`` for locally-owned v,
+        the pre-gathered slot for fetched remote v, -1 for ids outside the
+        plan. Turns a whole hop translation into ONE gather (no owner
+        mask, no where, no searchsorted). Cached per shard; callers pass
+        the same (owner, local_idx) the plan was built with. None above
+        the memory guard — callers fall back to :meth:`lookup`."""
+        if not (0 < self.num_vertices <= _DENSE_LUT_MAX_VERTICES):
+            return None
+        row = self._trans.get(shard)
+        if row is None:
+            # int32 on purpose: workspace rows fit comfortably, and the
+            # hop translation gather moves half the bytes.
+            row = np.where(np.asarray(owner) == shard,
+                           np.asarray(local_idx, np.int32),
+                           np.int32(-1))
+            row[self.shard_ids(shard)] = self.shard_slots(shard)
+            self._trans[shard] = row
+        return row
+
+    def lookup(self, shard: int, query: np.ndarray) -> np.ndarray:
+        """Workspace slots for global ids ``query`` on ``shard``.
+
+        Every queried id must be in the shard's remote set (callers filter
+        local ids first); unknown ids raise rather than alias silently.
+        """
+        query = np.asarray(query, np.int64)
+        lo, hi = int(self.starts[shard]), int(self.starts[shard + 1])
+        seg = self.ids[lo:hi]
+        if query.size and seg.size == 0:
+            raise KeyError(
+                f"ids not in shard {shard}'s remote set: {query[:8]}")
+        pos = np.searchsorted(seg, query)
+        if query.size:
+            bad = (pos >= seg.size) \
+                | (seg[np.minimum(pos, seg.size - 1)] != query)
+            if np.any(bad):
+                raise KeyError(f"ids not in shard {shard}'s remote set: "
+                               f"{query[bad][:8]}")
+        return self.slots[lo + pos]
+
+
 @dataclasses.dataclass
 class GatherPlan:
     """One exchange: requests + the workspace index of every remote vertex."""
@@ -42,7 +164,7 @@ class GatherPlan:
     r_max: int
     # global-vertex-id -> workspace slot, per requesting shard:
     #   slot(v) = local_rows + p * R_max + position (v owned by p)
-    slot_of: list[dict[int, int]]
+    slot_map: SlotMap
 
     def remote_rows_exact(self) -> int:
         return int(self.req_count.sum())
@@ -56,13 +178,152 @@ def build_gather_plan(needed_ids_per_shard: list[np.ndarray],
                       owner: np.ndarray, local_idx: np.ndarray,
                       num_shards: int, local_rows: int,
                       r_max: int | None = None) -> GatherPlan:
-    """Build the deduplicated exchange plan.
+    """Build the deduplicated exchange plan (vectorized).
 
     needed_ids_per_shard[s]: every global vertex id shard s touches this
     iteration (may include duplicates; we dedup here — that *is* §5.2).
+
+    All bookkeeping is flat numpy: ids are tagged with their requesting
+    shard via a combined ``shard * V + id`` key, deduped in one
+    ``np.unique``, grouped by owning peer with a stable ``lexsort``, and
+    scattered into the rectangular ``req`` with one fancy-index store.
     """
     n = num_shards
-    uniq = [np.unique(ids[owner[ids] != s]) if ids.size else np.zeros(0, np.int64)
+    owner = np.asarray(owner)
+    local_idx = np.asarray(local_idx)
+    V = owner.size
+
+    total_ids = sum(np.asarray(ids).size for ids in needed_ids_per_shard)
+    if _use_bitmap_dedup(n, V, total_ids):
+        # Bitmap dedup: mark[s, v] = shard s touches id v, then clear each
+        # id's home cell (local ids need no fetch). np.nonzero walks the
+        # bitmap row-major, handing back the dedup set already sorted by
+        # (shard, id) — SlotMap's exact layout — in O(ids + n·V), with no
+        # sort (and no concatenated copy) of the heavily duplicated raw
+        # id stream.
+        mark = np.zeros((n, V), bool)
+        for s, ids in enumerate(needed_ids_per_shard):
+            ids = np.asarray(ids)
+            if ids.size:
+                mark[s, ids.ravel()] = True
+        mark[owner, np.arange(V)] = False
+        u_shard, u_id = np.nonzero(mark)       # dedup set, (shard, id) order
+        u_own = owner[u_id].astype(np.int64)
+        # group by (shard, peer, id): a stable argsort over the small-range
+        # (shard, peer) key keeps ids ascending within each group.
+        order = np.argsort(u_shard * n + u_own, kind="stable")
+        s_o, p_o, v_o = u_shard[order], u_own[order], u_id[order]
+        # group-pos k holds dedup-pos order[k] -> scatter slots via order
+        sm_scatter = order
+    else:
+        # Sort dedup: one combined (shard, peer, id) key — a single
+        # np.unique both dedups per requesting shard (peer is a function
+        # of id, so (s, id) uniqueness is preserved) and leaves the output
+        # sorted by (shard, peer, id) — the (s, p) grouping req needs.
+        sizes = [np.asarray(ids).size for ids in needed_ids_per_shard]
+        if sum(sizes) == 0:
+            flat = np.zeros(0, np.int64)
+            shard = np.zeros(0, np.int64)
+        else:
+            flat = np.concatenate([np.asarray(ids, np.int64).ravel()
+                                   for ids in needed_ids_per_shard])
+            shard = np.repeat(np.arange(n, dtype=np.int64), sizes)
+        own = owner[flat].astype(np.int64) if flat.size else flat
+        remote = own != shard
+        flat, shard, own = flat[remote], shard[remote], own[remote]
+        ukey = np.unique((shard * n + own) * V + flat)
+        g, v_o = np.divmod(ukey, V)            # g = s * n + p
+        s_o, p_o = np.divmod(g, n)
+        # SlotMap wants per-shard segments sorted by id (not by peer);
+        # unique keys, so the default introsort beats a stable sort.
+        order = np.argsort(s_o * V + v_o)      # slotmap-pos -> group-pos
+        u_shard, u_id = s_o[order], v_o[order]
+        sm_scatter = np.empty(order.size, np.int64)
+        sm_scatter[order] = np.arange(order.size)  # group-pos -> slotmap-pos
+
+    counts = np.bincount(s_o * n + p_o,
+                         minlength=n * n).reshape(n, n).astype(np.int64)
+    if r_max is None:
+        r_max = max(1, int(counts.max()))
+    if counts.max() > r_max:
+        raise PlanOverflow("r_max", int(counts.max()), int(r_max))
+
+    # j-th id of a (s, p) group lands in req[s, p, j] and workspace slot
+    # local_rows + p*r_max + j.
+    group_start = np.concatenate(
+        ([0], np.cumsum(counts.reshape(-1))))[:-1]
+    j = np.arange(s_o.size, dtype=np.int64) - group_start[s_o * n + p_o]
+
+    req = np.zeros((n, n, r_max), np.int32)
+    req[s_o, p_o, j] = local_idx[v_o]
+    slot = local_rows + p_o * r_max + j
+
+    # slots aligned back to the (shard, id)-sorted SlotMap layout
+    slots_by_id = np.empty(slot.size, np.int64)
+    slots_by_id[sm_scatter] = slot
+    starts = np.concatenate(
+        ([0], np.cumsum(np.bincount(u_shard, minlength=n))))
+
+    return GatherPlan(req=req, req_count=counts, r_max=r_max,
+                      slot_map=SlotMap(starts=starts, ids=u_id,
+                                       slots=slots_by_id, num_vertices=V))
+
+
+def workspace_indices(hops: list[np.ndarray], shard: int,
+                      owner: np.ndarray, local_idx: np.ndarray,
+                      plan: GatherPlan) -> list[np.ndarray]:
+    """Map global vertex ids of a tree block to workspace slots on ``shard``:
+    locally-owned rows index the local table; remote rows index the
+    pre-gathered region. Hot path is one gather per hop through the
+    SlotMap's cached full translation row; above the row's memory guard it
+    falls back to owner-mask + searchsorted (still zero per-element
+    Python)."""
+    out = []
+    sm = plan.slot_map
+    row = sm.cached_translation_row(shard)
+    if row is None:
+        # Building the dense row costs O(V); only pay it when this call's
+        # id volume amortizes it (mirrors _use_bitmap_dedup's guard — a
+        # few thousand ids on a 30M-vertex graph stay on searchsorted).
+        total = sum(np.asarray(ids).size for ids in hops)
+        V = sm.num_vertices
+        if 0 < V and (V <= (1 << 22) or V <= total * 16):
+            row = sm.translation_row(shard, owner, local_idx)
+    for ids in hops:
+        ids = np.asarray(ids)
+        if row is not None:
+            w = row[ids]                     # already int32
+            if w.size and int(w.min()) < 0:
+                raise KeyError(f"ids not in shard {shard}'s remote set: "
+                               f"{ids[w < 0][:8]}")
+            out.append(w)
+            continue
+        is_local = owner[ids] == shard
+        w = np.where(is_local, local_idx[ids], 0).astype(np.int64)
+        rem_pos = np.nonzero(~is_local)[0]
+        if rem_pos.size:
+            w[rem_pos] = plan.slot_map.lookup(shard,
+                                              np.asarray(ids,
+                                                         np.int64)[rem_pos])
+        out.append(w.astype(np.int32))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Reference implementation (pure-Python, per-vertex) — parity oracle only.
+# ---------------------------------------------------------------------------
+
+def _reference_build_gather_plan(needed_ids_per_shard: list[np.ndarray],
+                                 owner: np.ndarray, local_idx: np.ndarray,
+                                 num_shards: int, local_rows: int,
+                                 r_max: int | None = None) -> GatherPlan:
+    """The original dict-based planner, kept verbatim as the parity oracle
+    (and as the 'legacy' side of benchmarks/planning.py). Returns the same
+    GatherPlan structure; its dict-built slot map is converted to a SlotMap
+    at the end so downstream code sees one type."""
+    n = num_shards
+    uniq = [np.unique(ids[owner[ids] != s]) if np.asarray(ids).size
+            else np.zeros(0, np.int64)
             for s, ids in enumerate(needed_ids_per_shard)]
     per_peer: list[list[np.ndarray]] = []
     counts = np.zeros((n, n), np.int64)
@@ -86,25 +347,50 @@ def build_gather_plan(needed_ids_per_shard: list[np.ndarray],
             ids = per_peer[s][p]
             req[s, p, :ids.size] = local_idx[ids]
             base = local_rows + p * r_max
-            for j, v in enumerate(ids):
-                m[int(v)] = base + j
+            for jj, v in enumerate(ids):
+                m[int(v)] = base + jj
         slot_of.append(m)
-    return GatherPlan(req=req, req_count=counts, r_max=r_max, slot_of=slot_of)
+    plan = GatherPlan(req=req, req_count=counts, r_max=r_max,
+                      slot_map=_slot_map_from_dicts(slot_of))
+    plan._slot_dicts = slot_of   # legacy translation path (benchmarks)
+    return plan
 
 
-def workspace_indices(hops: list[np.ndarray], shard: int,
-                      owner: np.ndarray, local_idx: np.ndarray,
-                      plan: GatherPlan) -> list[np.ndarray]:
-    """Map global vertex ids of a tree block to workspace slots on ``shard``:
-    locally-owned rows index the local table; remote rows index the
-    pre-gathered region."""
+def _slot_map_from_dicts(slot_of: list[dict[int, int]]) -> SlotMap:
+    ids_seg, slots_seg, starts = [], [], [0]
+    for m in slot_of:
+        ids = np.fromiter(m.keys(), np.int64, len(m))
+        order = np.argsort(ids, kind="stable")
+        ids_seg.append(ids[order])
+        slots_seg.append(
+            np.fromiter(m.values(), np.int64, len(m))[order])
+        starts.append(starts[-1] + len(m))
+    cat = (lambda xs: np.concatenate(xs) if xs else np.zeros(0, np.int64))
+    return SlotMap(starts=np.asarray(starts, np.int64),
+                   ids=cat(ids_seg), slots=cat(slots_seg))
+
+
+def _reference_workspace_indices(hops: list[np.ndarray], shard: int,
+                                 owner: np.ndarray, local_idx: np.ndarray,
+                                 plan: GatherPlan) -> list[np.ndarray]:
+    """Original per-element translation — the oracle for workspace_indices
+    parity and the 'legacy' side of benchmarks/planning.py. Uses the
+    reference plan's dicts when present (as the seed code did), else
+    rebuilds one from the SlotMap."""
     out = []
-    slots = plan.slot_of[shard]
+    dicts = getattr(plan, "_slot_dicts", None)
+    if dicts is not None:
+        slots = dicts[shard]
+    else:
+        sm = plan.slot_map
+        slots = {int(v): int(s) for v, s in zip(sm.shard_ids(shard),
+                                                sm.shard_slots(shard))}
     for ids in hops:
         is_local = owner[ids] == shard
         w = np.where(is_local, local_idx[ids], 0).astype(np.int64)
         if not np.all(is_local):
             rem_pos = np.nonzero(~is_local)[0]
-            w[rem_pos] = np.array([slots[int(v)] for v in ids[rem_pos]], np.int64)
+            w[rem_pos] = np.array([slots[int(v)] for v in ids[rem_pos]],
+                                  np.int64)
         out.append(w.astype(np.int32))
     return out

@@ -24,6 +24,7 @@ DESIGN.md §2).
 from __future__ import annotations
 
 import dataclasses
+from concurrent.futures import Executor
 from typing import Literal, Optional, Sequence
 
 import numpy as np
@@ -38,6 +39,17 @@ from repro.core.pregather import (GatherPlan, PlanOverflow, build_gather_plan,
                                   workspace_indices)
 
 Strategy = Literal["model_centric", "hopgnn", "lo"]
+
+
+def _pmap(executor: Optional[Executor], fn, items: list) -> list:
+    """Map ``fn`` over ``items``, fanning out on ``executor`` when given.
+
+    The planner's per-(shard, step) work is numpy-heavy (sampling, dedup,
+    searchsorted translation) and releases the GIL, so a small thread pool
+    gives real multi-core planning without pickling graph structures."""
+    if executor is None or len(items) <= 1:
+        return [fn(x) for x in items]
+    return list(executor.map(fn, items))
 
 
 @dataclasses.dataclass
@@ -122,13 +134,21 @@ def plan_iteration(graph: CSRGraph,
                    rng: Optional[np.random.Generator] = None,
                    sample_seed: Optional[int] = None,
                    batch_pad: Optional[int] = None,
-                   r_max: Optional[int] = None) -> IterationPlan:
+                   r_max: Optional[int] = None,
+                   executor: Optional[Executor] = None) -> IterationPlan:
     """Compile one training iteration into an IterationPlan.
 
     ``sample_seed`` switches to stateless per-root-deterministic sampling:
     the tree below each root depends only on (root, seed), so two plans with
     the same roots and seed — regardless of strategy — train *identical*
     micrographs. This is the gradient-parity (accuracy fidelity) invariant.
+
+    ``executor``: optional thread pool the per-(shard, step) sampling and
+    per-shard index translation fan out on (the Trainer passes its planning
+    pool). Requires ``sample_seed`` for the sampling fan-out — a shared
+    stateful ``rng`` is not thread-safe, so with ``rng`` sampling stays
+    serial and only the translation parallelizes. Results are independent
+    of the executor (same blocks, same arrays, deterministic order).
     """
     if sample_seed is None:
         rng = rng or np.random.default_rng(0)
@@ -157,12 +177,10 @@ def plan_iteration(graph: CSRGraph,
         raise PlanOverflow("batch_pad", int(counts.max()), int(batch_pad))
 
     # ---- sample one padded TreeBlock per (shard, step) ----
-    blocks: list[list[TreeBlock]] = []          # [s][t]
     lab_arr = np.zeros((n, T, batch_pad), np.int32)
     w_arr = np.zeros((n, T, batch_pad), np.float32)
-    true_root_blocks: list[TreeBlock] = []      # unpadded, for accounting
+    jobs = []                                   # (s, t, padded_roots, k)
     for s in range(n):
-        row = []
         for t in range(T):
             roots = amat.roots_at(s, t)
             k = roots.size
@@ -171,12 +189,19 @@ def plan_iteration(graph: CSRGraph,
                 w_arr[s, t, :k] = 1.0
             padded = np.concatenate(
                 [roots, np.full(batch_pad - k, pad_vertex[s], np.int64)])
-            blk = sample_tree_block(graph, padded, num_layers, fanout,
-                                    rng=rng, seed=sample_seed)
-            row.append(blk)
-            if k:
-                true_root_blocks.append(blk.select(np.arange(k)))
-        blocks.append(row)
+            jobs.append((s, t, padded, k))
+
+    sample_exec = executor if sample_seed is not None else None
+    blks = _pmap(sample_exec,
+                 lambda j: sample_tree_block(graph, j[2], num_layers, fanout,
+                                             rng=rng, seed=sample_seed),
+                 jobs)
+    blocks: list[list[TreeBlock]] = [[None] * T for _ in range(n)]  # [s][t]
+    true_root_blocks: list[TreeBlock] = []      # unpadded, for accounting
+    for (s, t, _, k), blk in zip(jobs, blks):
+        blocks[s][t] = blk
+        if k:
+            true_root_blocks.append(blk.select(np.arange(k)))
 
     # ---- gather plans ----
     def shard_needed(s: int, ts: Sequence[int]) -> np.ndarray:
@@ -191,29 +216,40 @@ def plan_iteration(graph: CSRGraph,
                                  owner, local_idx, n, local_rows, r_max)
         req, step_req = plan.req, None
         r_max_eff = plan.r_max
-        for s in range(n):
+
+        def translate_shard(s: int) -> None:
+            # writes land in disjoint (s, t) slices — thread-safe fan-out
             for t in range(T):
                 widx = workspace_indices(blocks[s][t].hops, s, owner,
                                          local_idx, plan)
                 for h in range(num_layers + 1):
                     hop_idx[h][s, t] = widx[h]
+
+        _pmap(executor, translate_shard, list(range(n)))
         remote_exact = plan.remote_rows_exact()
     else:
         # per-step exchange: dedup within a step only — redundant fetches
         # across steps remain (that is exactly what §5.2 eliminates).
-        step_plans = [build_gather_plan([shard_needed(s, [t]) for s in range(n)],
-                                        owner, local_idx, n, local_rows, r_max)
-                      for t in range(T)]
+        step_plans = _pmap(
+            executor,
+            lambda t: build_gather_plan([shard_needed(s, [t])
+                                         for s in range(n)],
+                                        owner, local_idx, n, local_rows,
+                                        r_max),
+            list(range(T)))
         r_max_eff = r_max or max(p.r_max for p in step_plans)
         if any(p.req_count.max() > r_max_eff for p in step_plans):
             raise PlanOverflow(
                 "r_max", int(max(p.req_count.max() for p in step_plans)),
                 int(r_max_eff))
         step_req = np.zeros((n, T, n, r_max_eff), np.int32)
-        for t, p in enumerate(step_plans):
+
+        def translate_step(t: int) -> None:
+            p = step_plans[t]
             if p.r_max != r_max_eff:   # rebuild with the common r_max
                 p = build_gather_plan([shard_needed(s, [t]) for s in range(n)],
-                                      owner, local_idx, n, local_rows, r_max_eff)
+                                      owner, local_idx, n, local_rows,
+                                      r_max_eff)
                 step_plans[t] = p
             step_req[:, t] = p.req
             for s in range(n):
@@ -221,6 +257,8 @@ def plan_iteration(graph: CSRGraph,
                                          local_idx, p)
                 for h in range(num_layers + 1):
                     hop_idx[h][s, t] = widx[h]
+
+        _pmap(executor, translate_step, list(range(T)))
         req = np.zeros((n, n, r_max_eff), np.int32)  # unused in per-step mode
         remote_exact = sum(p.remote_rows_exact() for p in step_plans)
 

@@ -29,8 +29,25 @@ LANE = 128  # TPU lane width; feature tiles are multiples of this
 
 
 def _dblk(d: int) -> int:
-    """Feature-dim block: one lane tile if possible, whole dim if small."""
+    """Feature-dim block for a dim that needs no split: one lane tile when
+    the dim divides evenly, whole dim when it fits inside one tile."""
     return LANE if d % LANE == 0 else d
+
+
+def _dim_splits(d: int) -> list[tuple[int, int, int]]:
+    """Partition the feature dim into lane-tileable column ranges.
+
+    Returns ``[(offset, width, block)]``. A dim that divides by LANE (or
+    fits in one tile) is a single range; d > LANE with a remainder tiles
+    the first ``d // LANE * LANE`` lanes at LANE and the tail as one
+    sub-lane block — instead of the old whole-dim fallback, which put the
+    entire (possibly multi-thousand-column) row in one VMEM block and lost
+    lane alignment on all of it.
+    """
+    if d % LANE == 0 or d < LANE:
+        return [(0, d, _dblk(d))]
+    main = d // LANE * LANE
+    return [(0, main, LANE), (main, d - main, d - main)]
 
 
 # ---------------------------------------------------------------------------
@@ -42,18 +59,15 @@ def _gather_rows_kernel(idx_ref, table_ref, out_ref):
     out_ref[...] = table_ref[...]
 
 
-def gather_rows(table: jnp.ndarray, idx: jnp.ndarray,
-                interpret: bool = False) -> jnp.ndarray:
-    """table: (R, d), idx: (n,) int32 -> (n, d)."""
+def _gather_rows_call(table: jnp.ndarray, idx: jnp.ndarray, dblk: int,
+                      interpret: bool) -> jnp.ndarray:
     n = idx.shape[0]
     d = table.shape[1]
-    dblk = _dblk(d)
-    grid = (n, d // dblk)
     return pl.pallas_call(
         _gather_rows_kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
-            grid=grid,
+            grid=(n, d // dblk),
             in_specs=[
                 pl.BlockSpec((1, dblk), lambda i, j, idx_ref: (idx_ref[i], j)),
             ],
@@ -62,6 +76,15 @@ def gather_rows(table: jnp.ndarray, idx: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((n, d), table.dtype),
         interpret=interpret,
     )(idx, table)
+
+
+def gather_rows(table: jnp.ndarray, idx: jnp.ndarray,
+                interpret: bool = False) -> jnp.ndarray:
+    """table: (R, d), idx: (n,) int32 -> (n, d)."""
+    d = table.shape[1]
+    parts = [_gather_rows_call(table[:, off:off + w], idx, blk, interpret)
+             for off, w, blk in _dim_splits(d)]
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
 
 
 # ---------------------------------------------------------------------------
@@ -100,21 +123,27 @@ def gather_agg(table: jnp.ndarray, idx: jnp.ndarray, reduce: str = "sum",
     """
     n, f = idx.shape
     d = table.shape[1]
-    dblk = _dblk(d)
     kern = functools.partial(_gather_agg_kernel, fanout=f, reduce=reduce)
-    out = pl.pallas_call(
-        kern,
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
-            grid=(n, f, d // dblk),
-            in_specs=[
-                pl.BlockSpec((1, dblk),
-                             lambda i, j, t, idx_ref: (idx_ref[i, j], t)),
-            ],
-            out_specs=pl.BlockSpec((1, dblk),
-                                   lambda i, j, t, idx_ref: (i, t)),
-        ),
-        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
-        interpret=interpret,
-    )(idx, table)
+
+    def call(table_part: jnp.ndarray, dblk: int) -> jnp.ndarray:
+        dd = table_part.shape[1]
+        return pl.pallas_call(
+            kern,
+            grid_spec=pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=1,
+                grid=(n, f, dd // dblk),
+                in_specs=[
+                    pl.BlockSpec((1, dblk),
+                                 lambda i, j, t, idx_ref: (idx_ref[i, j], t)),
+                ],
+                out_specs=pl.BlockSpec((1, dblk),
+                                       lambda i, j, t, idx_ref: (i, t)),
+            ),
+            out_shape=jax.ShapeDtypeStruct((n, dd), jnp.float32),
+            interpret=interpret,
+        )(idx, table_part)
+
+    parts = [call(table[:, off:off + w], blk)
+             for off, w, blk in _dim_splits(d)]
+    out = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
     return out.astype(table.dtype)

@@ -15,6 +15,14 @@ zero-weighted; padded request slots fetch row 0 and are never read, so
 numerics are unchanged — see the budgeted-gradient-parity test), and an
 overflow re-buckets explicitly to the next power of two. One bucket ⇒ one
 jit trace; re-buckets are counted and visible.
+
+Buckets are kept **per merge pattern** (keyed by the plan's ``num_steps``):
+merging folds the same roots into fewer, larger (shard, step) groups, so a
+pattern change legitimately needs a larger ``batch_pad`` — but growing one
+global bucket would retrace *every* pattern and, worse, reverting the merge
+would keep the oversized shapes forever. With per-pattern buckets a §5.3
+examination walk (T → T-1 → revert to T) reuses the T bucket untouched:
+pattern changes never force a global re-bucket.
 """
 from __future__ import annotations
 
@@ -31,9 +39,12 @@ def next_bucket(n: int, minimum: int = 1) -> int:
 class ShapeBudget:
     """Per-run quantized sizes for the planner's rectangular arrays.
 
-    ``batch_pad``/``r_max`` of 0 mean "not yet learned": the first
-    :meth:`plan` call probes exact sizes and buckets them (never below the
-    ``min_*`` floors, which give headroom against immediate re-bucketing).
+    ``batch_pad``/``r_max`` given to the constructor seed every new
+    pattern's bucket (both nonzero: used as-is, no probe; one nonzero: a
+    floor merged with the probe). After each :meth:`plan` call they mirror
+    the *active* pattern's bucket, so existing callers keep reading the
+    shapes the last plan was built with. ``buckets`` maps
+    ``num_steps -> [batch_pad, r_max]`` and is the source of truth.
     """
 
     batch_pad: int = 0
@@ -44,13 +55,22 @@ class ShapeBudget:
     # --- counters (observability; the compile-once tests read these) ---
     rebuckets: int = 0
     plans_built: int = 0
+    probes: int = 0
+    buckets: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        # constructor-given sizes become the seed for every new bucket
+        self._seed = (int(self.batch_pad), int(self.r_max))
+        self._active_key = None
 
     def signature(self) -> tuple[int, int]:
         return (self.batch_pad, self.r_max)
 
     def grow(self, field: str, needed: int) -> None:
         """Explicit overflow re-bucketing: jump to the next power-of-two
-        bucket that fits ``needed`` (strictly larger than the current one)."""
+        bucket that fits ``needed`` (strictly larger than the current one).
+        Only the active pattern's bucket grows — others keep their shapes
+        (and their compiled programs)."""
         self.rebuckets += 1
         if field == "batch_pad":
             self.batch_pad = next_bucket(needed, self.batch_pad + 1)
@@ -58,6 +78,22 @@ class ShapeBudget:
             self.r_max = next_bucket(needed, self.r_max + 1)
         else:
             raise ValueError(f"unknown budget field {field!r}")
+        if self._active_key is not None:
+            self.buckets[self._active_key] = [self.batch_pad, self.r_max]
+
+    @staticmethod
+    def _pattern_key(plan_kwargs: dict):
+        """The plan's merge pattern (num_steps), derived without planning:
+        an explicit assignment carries it; otherwise hopgnn's rotation has
+        one step per model and the one-step strategies have 1."""
+        assignment = plan_kwargs.get("assignment")
+        if assignment is not None:
+            return int(assignment.num_steps)
+        roots = plan_kwargs.get("roots_per_model")
+        if plan_kwargs.get("strategy", "hopgnn") == "hopgnn" \
+                and roots is not None:
+            return len(roots)
+        return 1 if roots is not None else "default"
 
     def plan(self, planner=None, **plan_kwargs):
         """Build an IterationPlan under this budget (bucketed shapes).
@@ -69,17 +105,26 @@ class ShapeBudget:
         from repro.core.pregather import PlanOverflow
         if planner is None:
             from repro.core.strategies import plan_iteration as planner
-        if not (self.batch_pad and self.r_max):
-            # First call: probe exact sizes once, then bucket. The probe is
-            # host-side numpy only — it never touches the device engine, so
-            # it costs one extra planning pass on iteration 0 and nothing
-            # after.
-            probe = planner(**plan_kwargs)
-            self.batch_pad = max(self.batch_pad,
-                                 next_bucket(probe.batch_pad,
-                                             self.min_batch_pad))
-            self.r_max = max(self.r_max,
-                             next_bucket(probe.r_max, self.min_r_max))
+        key = self._pattern_key(plan_kwargs)
+        bucket = self.buckets.get(key)
+        if bucket is None:
+            seed_bp, seed_rm = self._seed
+            if seed_bp and seed_rm:
+                bucket = [seed_bp, seed_rm]
+            else:
+                # First plan of this pattern: probe exact sizes once, then
+                # bucket. The probe is host-side numpy only — it never
+                # touches the device engine, so it costs one extra planning
+                # pass per *pattern* and nothing after.
+                probe = planner(**plan_kwargs)
+                self.probes += 1
+                bucket = [next_bucket(probe.batch_pad,
+                                      max(self.min_batch_pad, seed_bp)),
+                          next_bucket(probe.r_max,
+                                      max(self.min_r_max, seed_rm))]
+            self.buckets[key] = bucket
+        self._active_key = key
+        self.batch_pad, self.r_max = bucket
         for _ in range(self.max_rebuckets + 1):
             try:
                 out = planner(**plan_kwargs, batch_pad=self.batch_pad,

@@ -7,9 +7,15 @@ to hand-roll per file:
   quantizes ``batch_pad``/``r_max`` so every IterationPlan shares device
   shapes and the jitted iteration (repro.core.distributed's compiled-fn
   cache) traces once per bucket, not once per step.
-* **Plan prefetch** — a single background thread builds plan *i+1*
-  (sampling + pre-gather dedup, pure numpy) while the device executes plan
-  *i*: the SPMD analogue of GraphBolt-style feature prefetching.
+* **Plan prefetch** — a background thread double-buffers plan *i+1* while
+  the device executes plan *i* (the SPMD analogue of GraphBolt-style
+  feature prefetching), and the plan under construction fans its
+  per-(shard, step) sampling and per-shard SlotMap translation out over a
+  small planning thread pool (``planner_threads``, numpy releases the
+  GIL). Contract: one plan in flight at a time, up to ``planner_threads``
+  cores inside it, results independent of the pool (deterministic order);
+  per-epoch planning time and plan counts land in
+  :class:`EpochStats` (``plan_time_s`` / ``plans_built``).
 * **Merging** — a §5.3 :class:`MergingController` driven by the *correct*
   timing signal: steady-state device time per epoch, computed by excluding
   iterations on which the engine's trace log recorded an XLA (re)trace.
@@ -29,6 +35,8 @@ Typical use::
 from __future__ import annotations
 
 import dataclasses
+import os
+import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, Optional, Sequence
@@ -62,6 +70,10 @@ class EpochStats:
     acc: Optional[float] = None
     compile_free: bool = True   # False: every iteration traced, so
     #                             steady_time_s still contains compile time
+    plan_time_s: float = 0.0    # host planning time (prefetch thread; this
+    #                             overlaps device time, so it only costs
+    #                             wall-clock when it exceeds the device time)
+    plans_built: int = 0        # plans constructed during this epoch
 
 
 class Trainer:
@@ -78,6 +90,7 @@ class Trainer:
                  mesh=None,
                  budget: Optional[ShapeBudget] = None,
                  prefetch: bool = True,
+                 planner_threads: Optional[int] = None,
                  train_vertices: Optional[np.ndarray] = None,
                  root_fn: Optional[Callable[[int, int], Sequence]] = None,
                  root_seed: int = 0,
@@ -116,6 +129,27 @@ class Trainer:
         self.global_step = 0
         self._resume_pattern: Optional[tuple] = None  # (steps, frozen, time)
         self._prefetch = prefetch
+        # Planning pool contract: build_plan fans its per-(shard, step)
+        # sampling and per-shard index translation out on this pool (the
+        # numpy planner kernels release the GIL); it is distinct from the
+        # single prefetch thread, which only double-buffers whole plans —
+        # so one in-flight plan uses up to planner_threads cores while the
+        # device executes the previous plan. planner_threads <= 1 disables
+        # the pool (serial planning inside the prefetch thread).
+        if planner_threads is None:
+            # affinity-aware: on a 1-core container cgroup, cpu_count()
+            # reports host cores and would oversubscribe the planner
+            try:
+                cores = len(os.sched_getaffinity(0))
+            except AttributeError:          # non-Linux
+                cores = os.cpu_count() or 1
+            planner_threads = min(4, cores)
+        self.planner_threads = int(planner_threads)
+        self._plan_pool: Optional[ThreadPoolExecutor] = None  # lazy; see
+        #   _get_plan_pool / fit()'s finally for the lifecycle
+        self._plan_time_lock = threading.Lock()
+        self._plan_time_acc = 0.0
+        self._plans_built_acc = 0
 
     @classmethod
     def from_env(cls, env: dict, cfg: GNNConfig, **kw) -> "Trainer":
@@ -166,16 +200,42 @@ class Trainer:
 
     def build_plan(self, epoch: int, it: int,
                    batch_per_model: int) -> IterationPlan:
+        t0 = time.perf_counter()
         roots = self._roots_for(epoch, it, batch_per_model)
         assignment = self._assignment_for(roots)
-        return self.budget.plan(
+        plan = self.budget.plan(
             graph=self.graph, labels=self.labels, part=self.part,
             owner=self.owner, local_idx=self.local_idx,
             local_rows=int(self._table_np.shape[1]),
             roots_per_model=roots, num_layers=self.cfg.num_layers,
             fanout=self.cfg.fanout, strategy=self.strategy,
             pregather=self.pregather, assignment=assignment,
+            executor=self._get_plan_pool(),
             sample_seed=self.sample_seed_base + epoch * 10_000 + it)
+        with self._plan_time_lock:
+            self._plan_time_acc += time.perf_counter() - t0
+            self._plans_built_acc += 1
+        return plan
+
+    def _get_plan_pool(self) -> Optional[ThreadPoolExecutor]:
+        """Planning pool, created on first use and torn down with fit()
+        (so many short-lived Trainers don't accumulate idle threads)."""
+        if self._plan_pool is None and self.planner_threads > 1:
+            self._plan_pool = ThreadPoolExecutor(
+                max_workers=self.planner_threads, thread_name_prefix="plan")
+        return self._plan_pool
+
+    def _close_plan_pool(self) -> None:
+        pool, self._plan_pool = self._plan_pool, None
+        if pool is not None:
+            pool.shutdown(wait=False, cancel_futures=True)
+
+    def _drain_plan_stats(self) -> tuple[float, int]:
+        with self._plan_time_lock:
+            out = (self._plan_time_acc, self._plans_built_acc)
+            self._plan_time_acc = 0.0
+            self._plans_built_acc = 0
+        return out
 
     # ------------------------------------------------------------------
     # Device stepping
@@ -246,18 +306,22 @@ class Trainer:
                 acc = (self.evaluate(n_eval=n_eval)
                        if eval_every and (epoch + 1) % eval_every == 0
                        else None)
+                plan_time, plans_built = self._drain_plan_stats()
                 st = EpochStats(epoch=epoch,
                                 loss=loss_sum / iters_per_epoch,
                                 time_s=dt, steady_time_s=steady_epoch,
                                 traces=int(sum(traced)),
                                 num_steps=num_steps, remote_rows=remote,
-                                acc=acc, compile_free=bool(steady))
+                                acc=acc, compile_free=bool(steady),
+                                plan_time_s=plan_time,
+                                plans_built=plans_built)
                 stats.append(st)
                 if log is not None:
                     log(f"epoch {epoch}: loss {st.loss:.4f} "
                         f"steps {st.num_steps} remote_rows {st.remote_rows} "
                         f"traces {st.traces} wall {st.time_s:.2f}s "
-                        f"steady {st.steady_time_s:.2f}s"
+                        f"steady {st.steady_time_s:.2f}s "
+                        f"plan {st.plan_time_s:.2f}s"
                         + ("" if st.compile_free else " (all-compile)")
                         + (f" acc {100 * acc:.1f}%" if acc is not None
                            else ""))
@@ -265,6 +329,7 @@ class Trainer:
         finally:
             if pool is not None:
                 pool.shutdown(wait=False, cancel_futures=True)
+            self._close_plan_pool()
         return stats
 
     @staticmethod

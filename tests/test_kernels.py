@@ -41,6 +41,40 @@ def test_gather_agg_sweep(n, f, d, reduce, dtype):
                                atol=2e-2 if dtype == jnp.bfloat16 else 1e-5)
 
 
+def test_dim_splits_lane_tiling():
+    """d > LANE with d % LANE != 0 must tile the first d//LANE*LANE lanes
+    at LANE width and carry only the tail as a sub-lane block (the old
+    fallback put the whole dim in one block)."""
+    from repro.kernels.gather_agg import LANE, _dim_splits
+    assert _dim_splits(128) == [(0, 128, 128)]
+    assert _dim_splits(256) == [(0, 256, 128)]
+    assert _dim_splits(96) == [(0, 96, 96)]
+    assert _dim_splits(192) == [(0, 128, LANE), (128, 64, 64)]
+    assert _dim_splits(300) == [(0, 256, LANE), (256, 44, 44)]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gather_rows_d192_lane_split(dtype):
+    """d = 192: 128-lane tile + 64-wide tail, stitched back bit-exact."""
+    rng = np.random.default_rng(6)
+    table = jnp.asarray(rng.standard_normal((31, 192)), dtype)
+    idx = jnp.asarray(rng.integers(0, 31, 27), jnp.int32)
+    out = gather_rows(table, idx, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(gather_rows_ref(table, idx)))
+
+
+@pytest.mark.parametrize("reduce", ["sum", "mean", "max"])
+def test_gather_agg_d192_lane_split(reduce):
+    rng = np.random.default_rng(7)
+    table = jnp.asarray(rng.standard_normal((23, 192)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, 23, (9, 5)), jnp.int32)
+    out = gather_agg(table, idx, reduce=reduce, interpret=True)
+    ref = gather_agg_ref(table, idx, reduce=reduce)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
 @given(st.integers(4, 40), st.integers(1, 8), st.integers(0, 100))
 @settings(max_examples=15, deadline=None)
 def test_gather_agg_property(n, f, seed):

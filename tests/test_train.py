@@ -68,6 +68,46 @@ def test_budget_learns_pow2_buckets(partitioned):
     assert budget.r_max & (budget.r_max - 1) == 0
 
 
+def test_budget_buckets_are_per_merge_pattern(partitioned):
+    """Switching merge patterns must not force a global re-bucket: each
+    num_steps keys its own bucket, and returning to a previously-seen
+    pattern reuses its bucket with no new probe and identical shapes."""
+    from repro.core.merging import merge_min_step
+    from repro.core.micrograph import hopgnn_assignment
+    d = partitioned
+    rng = np.random.default_rng(0)
+    tv = d["ds"].train_vertices()
+    roots = [rng.choice(tv, 12, replace=False) for _ in range(d["parts"])]
+    base = hopgnn_assignment(roots, d["part"])
+    merged = merge_min_step(base)
+    budget = ShapeBudget()
+
+    p_full = budget.plan(**_plan_kwargs(d, roots, assignment=base))
+    assert budget.probes == 1 and set(budget.buckets) == {base.num_steps}
+    p_merged = budget.plan(**_plan_kwargs(d, roots, assignment=merged))
+    assert budget.probes == 2
+    assert set(budget.buckets) == {base.num_steps, merged.num_steps}
+    full_bucket = tuple(budget.buckets[base.num_steps])
+
+    # back to the full rotation: prior bucket reused, no probe, no rebucket
+    p_again = budget.plan(**_plan_kwargs(d, roots, assignment=base))
+    assert budget.probes == 2 and budget.rebuckets == 0
+    assert tuple(budget.buckets[base.num_steps]) == full_bucket
+    assert (p_again.batch_pad, p_again.r_max) == \
+        (p_full.batch_pad, p_full.r_max)
+    # merging packs the same roots into fewer steps -> larger batch bucket
+    assert p_merged.num_steps == p_full.num_steps - 1
+
+
+def test_trainer_records_plan_time_stats(partitioned):
+    d = partitioned
+    tr = _trainer(d, _cfg(d))
+    stats = tr.fit(epochs=2, iters_per_epoch=3, batch_per_model=8)
+    for st in stats:
+        assert st.plans_built == 3
+        assert st.plan_time_s > 0.0
+
+
 # ---------------------------------------------------------------------------
 # Compile-once invariant (the tentpole regression test)
 # ---------------------------------------------------------------------------
