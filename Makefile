@@ -3,7 +3,7 @@
 PYTHON ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test test-all bench-smoke bench-plan train-smoke
+.PHONY: test test-all bench-smoke bench-plan bench-cache train-smoke
 
 # Fast lane (tier-1): everything except @pytest.mark.slow (pyproject default)
 test:
@@ -21,6 +21,11 @@ bench-smoke:
 # (writes BENCH_planning.json at the repo root)
 bench-plan:
 	$(PYTHON) -m benchmarks.planning
+
+# Remote-feature cache sweep: hit rate + bytes/iter vs budget (0 → covering)
+# (writes BENCH_cache.json at the repo root)
+bench-cache:
+	$(PYTHON) -m benchmarks.cache
 
 # 3-epoch compile-once smoke train (prints first vs steady epoch times)
 train-smoke:

@@ -1,0 +1,171 @@
+"""repro.cache benchmark: hit rate and per-iteration remote traffic vs
+cache budget, 0% → covering, for both admission policies.
+
+LeapGNN's pre-gathering dedups remote fetches within one iteration; the
+cache layer removes the *recurring* cross-iteration traffic (RapidGNN,
+PAPERS.md). This bench sweeps the per-shard byte budget from nothing to
+"covers every remote request of an epoch" and reports, per (policy,
+budget):
+
+  * steady-state cache hit rate (epochs after the first refresh),
+  * measured remote feature bytes per iteration (misses × row bytes) and
+    the drop vs cache-off — the ≥ 2× acceptance gate at covering budget,
+  * steady per-iteration wall time through the Trainer,
+  * jit traces in steady epochs (must be 0: refreshes never retrace),
+  * gradient bit-parity cache-on vs cache-off (must be exact), and
+  * the cache-adjusted α ratio next to the plain one.
+
+Writes BENCH_cache.json at the repo root (benchmarks.common.Bench).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Bench, setup
+from repro.cache import CacheStore, DegreePolicy, EpochPrefetcher
+from repro.core import distributed as engine
+from repro.core import plan_iteration, run_iteration
+from repro.core.comm_model import F32, alpha_ratio, alpha_ratio_cached
+from repro.models.gnn import GNNConfig, init_gnn, model_param_bytes
+from repro.optim import adam
+from repro.train import Trainer
+
+EPOCHS = 3
+ITERS = 4
+BATCH = 8
+
+
+def _cfg(env, hidden=32):
+    return GNNConfig(model="sage", num_layers=2, hidden_dim=hidden,
+                     feature_dim=env["ds"].feature_dim,
+                     num_classes=env["ds"].num_classes, fanout=4)
+
+
+def _trainer(env, cfg, **kw):
+    return Trainer.from_env(env, cfg, optimizer=adam(5e-3), merging=False,
+                            **kw)
+
+
+def _fit(env, cfg, **kw):
+    tr = _trainer(env, cfg, **kw)
+    stats = tr.fit(epochs=EPOCHS, iters_per_epoch=ITERS,
+                   batch_per_model=BATCH)
+    return tr, stats
+
+
+def _steady(stats):
+    """Epochs after the first refresh landed (epoch 0 is cold for lfu)."""
+    return stats[1:]
+
+
+def run(quick=True):
+    b = Bench("cache")
+    env = setup(dataset="products", scale=0.03 if quick else 0.15)
+    cfg = _cfg(env)
+    d = env["ds"].feature_dim
+    row_bytes = d * F32
+
+    # covering budget: every remote request of a steady epoch fits
+    probe = _trainer(env, cfg)
+    pf = EpochPrefetcher(
+        graph=env["ds"].graph, part=env["part"], owner=env["owner"],
+        num_shards=env["parts"], num_layers=cfg.num_layers,
+        fanout=cfg.fanout,
+        roots_for=lambda e, i: probe._roots_for(e, i, BATCH),
+        sample_seed_for=lambda e, i: e * 10_000 + i)
+    covering = max(pf.covering_rows(e, ITERS) for e in range(1, EPOCHS))
+    b.emit("workload", "covering_rows_per_shard", covering)
+    b.emit("workload", "feature_dim", d)
+
+    # ---- baseline: cache off ----
+    engine.clear_compile_cache()
+    _, stats0 = _fit(env, cfg)
+    miss0 = sum(s.remote_rows for s in _steady(stats0)) \
+        / (len(_steady(stats0)) * ITERS)
+    bytes0 = miss0 * row_bytes
+    b.emit("off", "remote_bytes_per_iter", round(bytes0))
+    b.emit("off", "steady_iter_ms",
+           round(1000 * np.mean([s.steady_time_s / ITERS
+                                 for s in _steady(stats0)]), 2))
+    losses0 = [s.loss for s in stats0]
+
+    spec_pb = model_param_bytes(init_gnn(
+        __import__("jax").random.PRNGKey(0), cfg))
+    b.emit("off", "alpha", round(alpha_ratio(int(miss0), d, spec_pb), 2))
+
+    drop_at_covering = {}
+    for policy in ("degree", "lfu"):
+        for frac in (0.1, 0.5, 1.0):
+            rows = max(1, int(round(covering * frac)))
+            engine.clear_compile_cache()
+            tr, stats = _fit(env, cfg, cache_policy=policy,
+                             cache_budget_bytes=rows * row_bytes)
+            case = f"{policy}-{int(100 * frac)}pct"
+            steady = _steady(stats)
+            hit = float(np.mean([s.cache_hit_rate for s in steady]))
+            miss = sum(s.remote_rows for s in steady) \
+                / (len(steady) * ITERS)
+            refresh_rows = tr.cache_store.rows_installed()
+            bytes_i = miss * row_bytes
+            drop = bytes0 / max(bytes_i, 1.0)
+            b.emit(case, "budget_rows", rows)
+            b.emit(case, "hit_rate_pct", round(100 * hit, 1))
+            b.emit(case, "remote_bytes_per_iter", round(bytes_i))
+            b.emit(case, "bytes_drop_x", round(drop, 2))
+            b.emit(case, "steady_iter_ms",
+                   round(1000 * np.mean([s.steady_time_s / ITERS
+                                         for s in steady]), 2))
+            b.emit(case, "refresh_s_per_epoch",
+                   round(float(np.mean([s.cache_refresh_s
+                                        for s in steady])), 4))
+            b.emit(case, "traces_after_epoch0",
+                   sum(s.traces for s in steady))
+            b.emit(case, "alpha_cached",
+                   round(alpha_ratio_cached(int(miss), d, spec_pb,
+                                            refresh_rows=refresh_rows,
+                                            iters_per_refresh=ITERS), 2))
+            # bitwise training parity: same seeds → same per-epoch losses
+            b.emit(case, "loss_bit_identical",
+                   int([s.loss for s in stats] == losses0))
+            if frac == 1.0:
+                drop_at_covering[policy] = drop
+
+    # ---- single-iteration gradient bit-parity, cache on vs off ----
+    import jax
+    import jax.numpy as jnp
+    rng = np.random.default_rng(0)
+    tv = env["ds"].train_vertices()
+    roots = [rng.choice(tv, BATCH, replace=False)
+             for _ in range(env["parts"])]
+    kw = dict(num_layers=cfg.num_layers, fanout=cfg.fanout,
+              strategy="hopgnn", pregather=True, sample_seed=11)
+    args = (env["ds"].graph, env["ds"].labels, env["part"], env["owner"],
+            env["local_idx"], env["table"].shape[1], roots)
+    params = init_gnn(jax.random.PRNGKey(0), cfg)
+    plan_off = plan_iteration(*args, **kw)
+    pol = DegreePolicy(env["ds"].graph, env["owner"])
+    store = CacheStore(env["parts"], d, c_max=256)
+    ids = [pol.select(s, 256) for s in range(env["parts"])]
+    store.install(ids, [env["table"][env["owner"][i], env["local_idx"][i]]
+                        for i in ids])
+    plan_on = plan_iteration(*args, **kw, cache_index=store.index)
+    g0, l0 = run_iteration(params, env["table"], plan_off, cfg)
+    g1, l1 = run_iteration(params, env["table"], plan_on, cfg,
+                           cache=store.device_table)
+    dmax = max(float(jnp.abs(a - c).max()) for a, c in
+               zip(jax.tree.leaves(g0), jax.tree.leaves(g1)))
+    b.emit("parity", "grad_dmax", dmax)
+    b.emit("parity", "loss_equal", int(float(l0) == float(l1)))
+    b.emit("parity", "hit_rows", plan_on.cache_hit_rows)
+
+    b.emit("summary", "bytes_drop_x_covering_lfu",
+           round(drop_at_covering.get("lfu", 0.0), 2))
+    b.emit("summary", "meets_2x_gate",
+           int(max(drop_at_covering.values(), default=0.0) >= 2.0))
+    b.save_csv()
+    b.save_json()
+    return b.rows
+
+
+if __name__ == "__main__":
+    run()

@@ -14,7 +14,8 @@ import traceback
 
 
 SUITES = ["alpha", "locality", "comm_volume", "end_to_end", "ablation",
-          "merging", "sensitivity", "accuracy", "roofline", "planning"]
+          "merging", "sensitivity", "accuracy", "roofline", "planning",
+          "cache"]
 
 
 def main() -> None:

@@ -9,9 +9,11 @@ import argparse
 
 import numpy as np
 
+from repro.cache import CacheStore, DegreePolicy
 from repro.core import plan_iteration
 from repro.core.comm_model import (FABRICS, ModelSpec, alpha_ratio,
-                                   hopgnn_bytes, lo_bytes,
+                                   alpha_ratio_cached, hopgnn_bytes,
+                                   hopgnn_bytes_cached, lo_bytes,
                                    model_centric_bytes, naive_fc_bytes,
                                    p3_bytes)
 from repro.graph import make_dataset
@@ -30,6 +32,9 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=128)
     ap.add_argument("--fanout", type=int, default=10)
     ap.add_argument("--layers", type=int, default=3)
+    ap.add_argument("--cache-rows", type=int, default=1024,
+                    help="per-shard remote-feature cache budget "
+                         "(repro.cache, degree policy; 0 disables)")
     args = ap.parse_args()
 
     ds = make_dataset(args.dataset, scale=args.scale, seed=0)
@@ -73,10 +78,35 @@ def main() -> None:
             plan.remote_rows_exact, plan.num_steps, spec, args.shards,
             replicated_params=True),
     }
+    if args.cache_rows > 0:
+        # degree-policy resident cache: re-plan the same iteration against
+        # it and report the cache-adjusted bytes (misses + amortized refill)
+        pol = DegreePolicy(ds.graph, owner)
+        store = CacheStore(args.shards, ds.feature_dim,
+                           c_max=args.cache_rows)
+        ids = [pol.select(s, args.cache_rows) for s in range(args.shards)]
+        store.install(ids, [table[owner[i], local_idx[i]] for i in ids])
+        plan_c = plan_iteration(ds.graph, ds.labels, part, owner, local_idx,
+                                table.shape[1], roots,
+                                num_layers=args.layers, fanout=args.fanout,
+                                strategy="hopgnn", pregather=True,
+                                sample_seed=7, cache_index=store.index)
+        rows["HopGNN (SPMD+cache)"] = hopgnn_bytes_cached(
+            plan_c.remote_rows_exact, plan_c.cache_hit_rows, plan_c.num_steps,
+            spec, args.shards, replicated_params=True,
+            refresh_rows=store.rows_installed(), iters_per_refresh=8)
     a = alpha_ratio(rows["model-centric (DGL)"]["remote_rows"],
                     spec.feature_dim, spec.param_bytes)
     print(f"{args.dataset} × {args.model}: α = {a:.1f} "
           f"(model {spec.param_bytes / 1e6:.2f} MB)")
+    if args.cache_rows > 0:
+        a_c = alpha_ratio_cached(plan_c.remote_rows_exact, spec.feature_dim,
+                                 spec.param_bytes,
+                                 refresh_rows=store.rows_installed(),
+                                 iters_per_refresh=8)
+        print(f"cache ({args.cache_rows} rows/shard, degree policy): "
+              f"hit rate {100 * plan_c.cache_hit_rate():.1f}%, "
+              f"cache-adjusted α = {a_c:.1f}")
     print(f"{'strategy':24s} {'total MB':>10s} {'feat':>8s} {'model':>8s} "
           f"{'interm':>8s} {'10GbE ms':>9s} {'ICI ms':>8s}")
     for name, d in rows.items():

@@ -1,0 +1,27 @@
+"""repro.cache — degree-aware remote-feature cache with deterministic
+epoch prefetch.
+
+LeapGNN's pre-gathering (§5.2) dedups remote fetches *within* one
+iteration; this subsystem removes the recurring cross-iteration traffic on
+top of it (RapidGNN, PAPERS.md): an admission policy (:mod:`policy`)
+chooses per-shard cached remote-vertex sets under a byte budget, a
+device-resident padded store (:mod:`store`) keeps those rows next to the
+local feature shard, and a deterministic epoch prefetcher (:mod:`prefetch`)
+computes next-epoch hot sets ahead of time so refreshes happen off the
+critical path.
+
+The planner splits every needed remote id into cache *hits* (read from the
+resident table — the workspace becomes ``[local | cached | fetched]``) and
+*misses* (shipped through the ordinary all_to_all exchange); features are
+static during training, so cached rows are exact copies and cache-enabled
+gradients are bit-identical to cache-off (tests/test_cache.py).
+"""
+from repro.cache.policy import (DegreePolicy, LFUPolicy, budget_rows,
+                                make_policy)
+from repro.cache.prefetch import EpochPrefetcher
+from repro.cache.store import CacheIndex, CacheStore
+
+__all__ = [
+    "CacheIndex", "CacheStore", "DegreePolicy", "LFUPolicy",
+    "EpochPrefetcher", "budget_rows", "make_policy",
+]

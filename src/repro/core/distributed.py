@@ -17,13 +17,27 @@ feature rows back — the SPMD analogue of the paper's batched gRPC fetch.
 Training then scans the iteration's time steps (§5.1), accumulating
 gradients, and ends with a single data-parallel gradient reduction.
 
+Remote-feature cache (repro.cache): every iteration body takes a
+``(N, c_max, d)`` cache table next to the feature table; the per-shard
+workspace is assembled as ``[local | cached | fetched]`` rows, matching the
+planner's slot layout. ``c_max = 0`` (the default when no cache is passed)
+degenerates to the original two-region workspace.
+
+Per-step collectives: the T index requests ship in ONE batched all_to_all
+hoisted ahead of the time-step scan (PR 2). When ``T·r_max`` fits
+:data:`FOLD_RETURNS_MAX_TR`, the T feature *returns* are folded into one
+batched collective too (``serve_features_batched``): per-step mode then
+runs exactly 2 all_to_alls per iteration — the same count as pregather
+mode — at the cost of a ``(T, P, r_max, d)`` staging buffer, which is what
+the budget flag gates.
+
 Compile-once contract: jitted callables are built once per
-``(cfg, pregather, mesh, axis)`` by :func:`get_compiled_iteration` and
-reused by every ``run_iteration`` call; the true global batch size is a
-*traced* scalar (``denom``), so varying true batch sizes never retrace.
-Each (re)trace is appended to a module-level trace log, which the
-repro.train Trainer and the regression tests use to assert the
-compile-once invariant.
+``(cfg, pregather, fold_returns, mesh, axis)`` by
+:func:`get_compiled_iteration` and reused by every ``run_iteration`` call;
+the true global batch size is a *traced* scalar (``denom``), so varying
+true batch sizes never retrace. Each (re)trace is appended to a
+module-level trace log, which the repro.train Trainer and the regression
+tests use to assert the compile-once invariant.
 """
 from __future__ import annotations
 
@@ -92,6 +106,23 @@ class ShardComm:
         return jax.lax.all_to_all(served, self.axis, split_axis=0,
                                   concat_axis=0, tiled=True)
 
+    def serve_features_batched(self, table: jnp.ndarray,
+                               incoming: jnp.ndarray) -> jnp.ndarray:
+        """Fold all T feature returns into ONE all_to_all.
+
+        incoming: (T, P, r_max) server-view indices (the output of
+        :meth:`exchange_indices_batched`). Returns (T, P, r_max, d):
+        ``out[t, p]`` = rows fetched from peer p for step t — each
+        ``out[t]`` bit-identical to the per-step :meth:`serve_features`
+        slice (same gather, same exchange, only batched). With the batched
+        index exchange this brings per-step mode to exactly 2 all_to_alls
+        per iteration, paying a (T, P, r_max, d) staging buffer."""
+        T, P, r = incoming.shape
+        served = jnp.take(table, incoming.reshape(-1), axis=0)
+        served = served.reshape(T, P, r, -1)
+        return jax.lax.all_to_all(served, self.axis, split_axis=1,
+                                  concat_axis=1, tiled=True)
+
     def exchange(self, table: jnp.ndarray, req: jnp.ndarray) -> jnp.ndarray:
         """table: (local_rows, d); req: (P, r_max) peer-local indices.
         Returns (P, r_max, d): row p = rows fetched from peer p."""
@@ -140,6 +171,18 @@ class EmulatedComm:
             return jnp.take(table_p, idx_p, axis=0)
         return jax.vmap(per_peer)(table_g, idx)               # (P, r_max, d)
 
+    def serve_features_batched_global(self, table_g: jnp.ndarray,
+                                      incoming_g: jnp.ndarray) -> jnp.ndarray:
+        """Emulated analogue of ShardComm.serve_features_batched: all T
+        feature returns for all shards at once. incoming_g: (N, T, P, r_max)
+        server-view. Returns (N, T, P, r_max, d):
+        ``out[s, t, p] = table_g[p][incoming_g[p, t, s]]`` — each [s, t]
+        slice bit-identical to :meth:`serve_step_global`."""
+        def per_peer(table_p, idx_p):      # (rows, d), (T, S, r)
+            return jnp.take(table_p, idx_p, axis=0)           # (T, S, r, d)
+        out = jax.vmap(per_peer)(table_g, incoming_g)         # (P, T, S, r, d)
+        return jnp.transpose(out, (2, 1, 0, 3, 4))            # (S, T, P, r, d)
+
     def grad_mean_global(self, grads_g, denom: float):
         return jax.tree.map(lambda g: jnp.sum(g, axis=0) / denom, grads_g)
 
@@ -177,23 +220,37 @@ def _shard_grads(params, cfg: GNNConfig, workspace_fn: Callable,
     return grads, loss_sum
 
 
-def _iteration_shard(params, table, dev, cfg: GNNConfig, pregather: bool,
-                     denom, comm: ShardComm):
+def _iteration_shard(params, table, cache, dev, cfg: GNNConfig,
+                     pregather: bool, fold_returns: bool, denom,
+                     comm: ShardComm):
     """Body run on every shard inside shard_map. ``dev`` = plan.device_args()
-    with the leading shard axis already stripped. ``denom`` is the true
-    global batch size as a traced scalar (not static — see module doc)."""
+    with the leading shard axis already stripped. ``cache`` is the shard's
+    (c_max, d) resident remote-feature rows (c_max = 0 when caching is off);
+    the workspace is assembled as [local | cached | fetched], matching the
+    planner's slot layout. ``denom`` is the true global batch size as a
+    traced scalar (not static — see module doc)."""
+    base = jnp.concatenate([table, cache], 0)     # [local | cached]
+    d = table.shape[1]
     if pregather:
         recv = comm.exchange(table, dev["req"])            # (P, r_max, d)
-        ws = jnp.concatenate([table, recv.reshape(-1, table.shape[1])], 0)
+        ws = jnp.concatenate([base, recv.reshape(-1, d)], 0)
         workspace_fn = lambda t: ws
     else:
         # All T index requests ship in one batched all_to_all before the
         # time-step scan; the scan body then only pays the feature-return
-        # collective — T+1 all_to_alls per iteration instead of 2T.
+        # collective — T+1 all_to_alls per iteration instead of 2T. With
+        # fold_returns the T returns also collapse into one pre-scan
+        # collective: exactly 2 all_to_alls per iteration.
         incoming = comm.exchange_indices_batched(dev["step_req"])
-        def workspace_fn(t):
-            recv = comm.serve_features(table, incoming[t])
-            return jnp.concatenate([table, recv.reshape(-1, table.shape[1])], 0)
+        if fold_returns:
+            recv_all = comm.serve_features_batched(table, incoming)
+            def workspace_fn(t):
+                return jnp.concatenate(
+                    [base, recv_all[t].reshape(-1, d)], 0)
+        else:
+            def workspace_fn(t):
+                recv = comm.serve_features(table, incoming[t])
+                return jnp.concatenate([base, recv.reshape(-1, d)], 0)
     grads, loss_sum = _shard_grads(params, cfg, workspace_fn,
                                    dev["hop_idx"], dev["labels"], dev["weights"])
     grads = comm.grad_mean(grads, denom)
@@ -205,10 +262,16 @@ def _iteration_shard(params, table, dev, cfg: GNNConfig, pregather: bool,
 # Compiled-fn cache + trace log (compile-once contract)
 # ---------------------------------------------------------------------------
 
-# (cfg, pregather, mesh, axis) -> jitted callable. jit's own cache then keys
-# on argument shapes/dtypes, so one entry serves every shape bucket; a new
-# bucket retraces exactly once and is recorded in the trace log.
+# (cfg, pregather, fold_returns, mesh, axis) -> jitted callable. jit's own
+# cache then keys on argument shapes/dtypes, so one entry serves every shape
+# bucket; a new bucket retraces exactly once and is recorded in the trace log.
 _COMPILE_CACHE: dict = {}
+
+# Fold the T per-step feature returns into one batched all_to_all when
+# T·r_max is at most this many rows per peer (the staging buffer is
+# (T, P, r_max, d) — the flag bounds its footprint). run_iteration's
+# fold_returns=None consults this; pass an explicit bool to override.
+FOLD_RETURNS_MAX_TR = 1 << 15
 
 # Every jit (re)trace of an iteration body appends one record here. The
 # append runs at *trace* time only, so executions of an already-compiled
@@ -239,25 +302,31 @@ def _shape_sig(tree) -> tuple:
     return tuple((tuple(x.shape), str(x.dtype)) for x in jax.tree.leaves(tree))
 
 
-def _note_trace(kind: str, cfg: GNNConfig, pregather: bool, table, dev):
+def _note_trace(kind: str, cfg: GNNConfig, pregather: bool, table, cache,
+                dev):
     _TRACE_LOG.append((kind, cfg.model, bool(pregather),
-                       tuple(table.shape), _shape_sig(dev)))
+                       tuple(table.shape), tuple(cache.shape),
+                       _shape_sig(dev)))
 
 
 def get_compiled_iteration(cfg: GNNConfig, pregather: bool,
-                           mesh: Optional[Mesh] = None, axis: str = "data"):
+                           mesh: Optional[Mesh] = None, axis: str = "data",
+                           fold_returns: bool = False):
     """Return the cached jitted iteration fn for this engine configuration.
 
-    The callable's signature is ``fn(params, table, dev, denom)`` where
-    ``denom`` is the true global batch size as a float32 scalar. Building
-    the callable is cheap; *tracing* happens lazily per argument-shape
-    bucket inside jit and is what the trace log records.
+    The callable's signature is ``fn(params, table, cache, dev, denom)``
+    where ``cache`` is the (N, c_max, d) resident remote-feature table
+    (c_max = 0 disables caching) and ``denom`` is the true global batch
+    size as a float32 scalar. Building the callable is cheap; *tracing*
+    happens lazily per argument-shape bucket inside jit and is what the
+    trace log records. ``fold_returns`` only affects per-step mode.
     """
-    key = (cfg, bool(pregather), mesh, axis if mesh is not None else None)
+    key = (cfg, bool(pregather), bool(fold_returns), mesh,
+           axis if mesh is not None else None)
     fn = _COMPILE_CACHE.get(key)
     if fn is None:
-        fn = (_build_emulated(cfg, pregather) if mesh is None
-              else _build_sharded(cfg, pregather, mesh, axis))
+        fn = (_build_emulated(cfg, pregather, fold_returns) if mesh is None
+              else _build_sharded(cfg, pregather, fold_returns, mesh, axis))
         _COMPILE_CACHE[key] = fn
     return fn
 
@@ -266,44 +335,79 @@ def get_compiled_iteration(cfg: GNNConfig, pregather: bool,
 # Public entry points
 # ---------------------------------------------------------------------------
 
+def resolve_fold_returns(plan, fold_returns: Optional[bool] = None) -> bool:
+    """Auto-fold policy: fold the per-step feature returns when the staging
+    buffer is small enough (T·r_max ≤ FOLD_RETURNS_MAX_TR). Explicit bools
+    pass through; pregather mode never folds (nothing to fold)."""
+    if plan.pregather:
+        return False
+    if fold_returns is not None:
+        return bool(fold_returns)
+    return plan.num_steps * plan.r_max <= FOLD_RETURNS_MAX_TR
+
+
 def run_iteration(params, table_global, plan, cfg: GNNConfig,
-                  mesh: Optional[Mesh] = None):
+                  mesh: Optional[Mesh] = None, cache=None,
+                  fold_returns: Optional[bool] = None):
     """Execute one planned iteration.
 
     With a ``mesh`` (data axis length == plan.num_shards): shard_map with
     real collectives. Without: single-device emulation (same numerics).
+    ``cache`` is the (N, c_max, d) device-resident remote-feature table a
+    cache-aware plan was built against (required iff plan.c_max > 0; its
+    height must match the plan's). ``fold_returns=None`` applies the
+    :data:`FOLD_RETURNS_MAX_TR` auto policy in per-step mode.
     Returns (grads, mean_loss) — optimizer application is the caller's
     (training loop / train_step fusion decide placement).
 
     The jitted callable comes from the module-level compile cache: repeated
     calls with plans of the same device shapes reuse one compiled program.
     """
+    table_global = jnp.asarray(table_global)
+    if cache is None:
+        if plan.c_max:
+            raise ValueError(
+                f"plan was built against a cache (c_max={plan.c_max}) "
+                "but no cache table was passed")
+        cache = jnp.zeros((table_global.shape[0], 0, table_global.shape[-1]),
+                          table_global.dtype)
+    else:
+        cache = jnp.asarray(cache)
+        if int(cache.shape[1]) != int(plan.c_max):
+            raise ValueError(
+                f"cache table height {cache.shape[1]} != plan c_max "
+                f"{plan.c_max} (stale cache?)")
     dev = jax.tree.map(jnp.asarray, plan.device_args())
     denom = jnp.asarray(float(plan.global_batch), jnp.float32)
-    fn = get_compiled_iteration(cfg, plan.pregather, mesh=mesh)
-    return fn(params, jnp.asarray(table_global), dev, denom)
+    fn = get_compiled_iteration(cfg, plan.pregather, mesh=mesh,
+                                fold_returns=resolve_fold_returns(
+                                    plan, fold_returns))
+    return fn(params, table_global, cache, dev, denom)
 
 
 def make_sharded_iteration(cfg: GNNConfig, pregather: bool, mesh: Mesh,
-                           axis: str = "data"):
-    """jit-compiled shard_map iteration ``fn(params, table, dev, denom)``
-    for repeated use by the train loop (cached per configuration)."""
-    return get_compiled_iteration(cfg, pregather, mesh=mesh, axis=axis)
+                           axis: str = "data", fold_returns: bool = False):
+    """jit-compiled shard_map iteration ``fn(params, table, cache, dev,
+    denom)`` for repeated use by the train loop (cached per config)."""
+    return get_compiled_iteration(cfg, pregather, mesh=mesh, axis=axis,
+                                  fold_returns=fold_returns)
 
 
-def _build_sharded(cfg: GNNConfig, pregather: bool, mesh: Mesh, axis: str):
+def _build_sharded(cfg: GNNConfig, pregather: bool, fold_returns: bool,
+                   mesh: Mesh, axis: str):
     comm = ShardComm(axis)
 
-    def body(params, table, dev, denom):
-        _note_trace("sharded", cfg, pregather, table, dev)
+    def body(params, table, cache, dev, denom):
+        _note_trace("sharded", cfg, pregather, table, cache, dev)
         # shard_map passes per-shard views with the shard axis kept (size 1)
         table = table[0]
+        cache = cache[0]
         dev = jax.tree.map(lambda x: x[0], dev)
-        grads, loss = _iteration_shard(params, table, dev, cfg, pregather,
-                                       denom, comm)
+        grads, loss = _iteration_shard(params, table, cache, dev, cfg,
+                                       pregather, fold_returns, denom, comm)
         return grads, loss
 
-    shmapped = _shard_map(body, mesh, (P(), P(axis), P(axis), P()),
+    shmapped = _shard_map(body, mesh, (P(), P(axis), P(axis), P(axis), P()),
                           (P(), P()))
     return jax.jit(shmapped)
 
@@ -315,9 +419,9 @@ def collective_counts(fn, *args) -> dict:
     collective found inside a ``scan`` body by the scan trip count — so an
     all_to_all inside the time-step loop counts T times, one hoisted ahead
     of it counts once. This is the acceptance metric for the batched
-    per-step exchange: per-step mode must run exactly T+1 all_to_alls per
-    iteration (T feature returns + 1 batched index exchange), pregather
-    mode exactly 2.
+    per-step exchange: unfolded per-step mode must run exactly T+1
+    all_to_alls per iteration (T feature returns + 1 batched index
+    exchange), folded per-step mode and pregather mode exactly 2.
     """
     closed = jax.make_jaxpr(fn)(*args)
     counts: dict = {}
@@ -353,35 +457,43 @@ def _subjaxprs(v):
             yield from _subjaxprs(w)
 
 
-def _build_emulated(cfg: GNNConfig, pregather: bool):
-    def body(params, table_g, dev, denom):
-        _note_trace("emulated", cfg, pregather, table_g, dev)
-        return _emulated_iteration(params, table_g, dev, denom, cfg, pregather)
+def _build_emulated(cfg: GNNConfig, pregather: bool, fold_returns: bool):
+    def body(params, table_g, cache_g, dev, denom):
+        _note_trace("emulated", cfg, pregather, table_g, cache_g, dev)
+        return _emulated_iteration(params, table_g, cache_g, dev, denom,
+                                   cfg, pregather, fold_returns)
     return jax.jit(body)
 
 
-def _emulated_iteration(params, table_g, dev, denom, cfg: GNNConfig,
-                        pregather: bool):
+def _emulated_iteration(params, table_g, cache_g, dev, denom, cfg: GNNConfig,
+                        pregather: bool, fold_returns: bool):
     """Single-device emulation: python-loop over shards, explicit exchange."""
     ecomm = EmulatedComm()
     n = table_g.shape[0]
+    d = table_g.shape[-1]
     if pregather:
         recv_g = ecomm.exchange_global(table_g, dev["req"])   # (N,P,r,d)
     else:
         # index exchange hoisted ahead of the scan, mirroring ShardComm's
         # batched collective (here a pure transpose — same data movement)
         incoming_g = ecomm.exchange_indices_batched_global(dev["step_req"])
+        if fold_returns:
+            recv_all_g = ecomm.serve_features_batched_global(table_g,
+                                                             incoming_g)
     per_shard = []
     for s in range(n):
+        base = jnp.concatenate([table_g[s], cache_g[s]], 0)  # [local|cached]
         if pregather:
-            ws = jnp.concatenate(
-                [table_g[s], recv_g[s].reshape(-1, table_g.shape[-1])], 0)
+            ws = jnp.concatenate([base, recv_g[s].reshape(-1, d)], 0)
             workspace_fn = lambda t, ws=ws: ws
-        else:
-            def workspace_fn(t, s=s):
-                recv = ecomm.serve_step_global(table_g, incoming_g, t, s)
+        elif fold_returns:
+            def workspace_fn(t, s=s, base=base):
                 return jnp.concatenate(
-                    [table_g[s], recv.reshape(-1, table_g.shape[-1])], 0)
+                    [base, recv_all_g[s, t].reshape(-1, d)], 0)
+        else:
+            def workspace_fn(t, s=s, base=base):
+                recv = ecomm.serve_step_global(table_g, incoming_g, t, s)
+                return jnp.concatenate([base, recv.reshape(-1, d)], 0)
         hop_idx = [h[s] for h in dev["hop_idx"]]
         g, l = _shard_grads(params, cfg, workspace_fn, hop_idx,
                             dev["labels"][s], dev["weights"][s])

@@ -11,6 +11,13 @@ padded with 0; true counts ride along for exact byte accounting. The device
 engine turns this into two ``all_to_all`` collectives (indices out,
 features back) — the SPMD analogue of LeapGNN's batched gRPC fetch.
 
+Cache-aware path (repro.cache): when a resident :class:`CacheIndex` is
+passed, each deduped remote id is first probed against the requesting
+shard's cached set. Hits are translated to slots in the cached workspace
+region (``[local_rows, local_rows + c_max)``) and never enter the
+exchange; only misses are grouped into ``req``. Features are static during
+training, so cached rows are exact and the split is numerics-neutral.
+
 Planner hot path: plan construction is fully vectorized numpy — one
 ``np.unique`` over a flat ``(shard, id)`` key dedups every shard at once,
 ``bincount``/``lexsort`` produce the per-(shard, peer) layout, and the
@@ -23,8 +30,12 @@ and the parity tests assert the two agree exactly.
 from __future__ import annotations
 
 import dataclasses
+from typing import TYPE_CHECKING, Optional
 
 import numpy as np
+
+if TYPE_CHECKING:                      # duck-typed at runtime (no core→cache
+    from repro.cache.store import CacheIndex   # import cycle risk)
 
 
 class PlanOverflow(ValueError):
@@ -157,17 +168,33 @@ class SlotMap:
 
 @dataclasses.dataclass
 class GatherPlan:
-    """One exchange: requests + the workspace index of every remote vertex."""
+    """One exchange: requests + the workspace index of every remote vertex.
+
+    With a cache (repro.cache), the workspace on shard s is
+    ``[local_rows local | c_max cached | P*r_max fetched]``: remote ids
+    resident in the shard's cache table are *hits* (their slot points into
+    the cached region; they never enter ``req``), the rest are *misses*
+    shipped through the exchange as before. ``req``/``req_count``/``r_max``
+    therefore describe miss traffic only.
+    """
 
     req: np.ndarray          # (N, P, R_max) int32 — peer-local indices
-    req_count: np.ndarray    # (N, P) int64 — true counts (accounting)
+    req_count: np.ndarray    # (N, P) int64 — true miss counts (accounting)
     r_max: int
     # global-vertex-id -> workspace slot, per requesting shard:
-    #   slot(v) = local_rows + p * R_max + position (v owned by p)
+    #   hit:  slot(v) = local_rows + cache_slot(v)
+    #   miss: slot(v) = local_rows + c_max + p * R_max + position
     slot_map: SlotMap
+    c_max: int = 0                        # cached-region height (0 = no cache)
+    cache_hits: Optional[np.ndarray] = None   # (N,) int64 hit rows per shard
 
     def remote_rows_exact(self) -> int:
+        """Deduped remote rows actually shipped (misses only)."""
         return int(self.req_count.sum())
+
+    def cache_hit_rows(self) -> int:
+        """Deduped remote rows served from the resident cache."""
+        return 0 if self.cache_hits is None else int(self.cache_hits.sum())
 
     def remote_rows_padded(self) -> int:
         n, p = self.req_count.shape
@@ -177,7 +204,8 @@ class GatherPlan:
 def build_gather_plan(needed_ids_per_shard: list[np.ndarray],
                       owner: np.ndarray, local_idx: np.ndarray,
                       num_shards: int, local_rows: int,
-                      r_max: int | None = None) -> GatherPlan:
+                      r_max: int | None = None,
+                      cache: "Optional[CacheIndex]" = None) -> GatherPlan:
     """Build the deduplicated exchange plan (vectorized).
 
     needed_ids_per_shard[s]: every global vertex id shard s touches this
@@ -185,8 +213,11 @@ def build_gather_plan(needed_ids_per_shard: list[np.ndarray],
 
     All bookkeeping is flat numpy: ids are tagged with their requesting
     shard via a combined ``shard * V + id`` key, deduped in one
-    ``np.unique``, grouped by owning peer with a stable ``lexsort``, and
-    scattered into the rectangular ``req`` with one fancy-index store.
+    ``np.unique``, split against the optional resident ``cache``
+    (repro.cache.CacheIndex — hits point into the cached workspace region
+    and leave the exchange entirely), and the misses are grouped by owning
+    peer and scattered into the rectangular ``req`` with one fancy-index
+    store.
     """
     n = num_shards
     owner = np.asarray(owner)
@@ -208,18 +239,10 @@ def build_gather_plan(needed_ids_per_shard: list[np.ndarray],
                 mark[s, ids.ravel()] = True
         mark[owner, np.arange(V)] = False
         u_shard, u_id = np.nonzero(mark)       # dedup set, (shard, id) order
-        u_own = owner[u_id].astype(np.int64)
-        # group by (shard, peer, id): a stable argsort over the small-range
-        # (shard, peer) key keeps ids ascending within each group.
-        order = np.argsort(u_shard * n + u_own, kind="stable")
-        s_o, p_o, v_o = u_shard[order], u_own[order], u_id[order]
-        # group-pos k holds dedup-pos order[k] -> scatter slots via order
-        sm_scatter = order
     else:
-        # Sort dedup: one combined (shard, peer, id) key — a single
-        # np.unique both dedups per requesting shard (peer is a function
-        # of id, so (s, id) uniqueness is preserved) and leaves the output
-        # sorted by (shard, peer, id) — the (s, p) grouping req needs.
+        # Sort dedup: one combined (shard, id) key — a single np.unique
+        # dedups per requesting shard and leaves the output in the
+        # (shard, id) order SlotMap wants.
         sizes = [np.asarray(ids).size for ids in needed_ids_per_shard]
         if sum(sizes) == 0:
             flat = np.zeros(0, np.int64)
@@ -230,16 +253,35 @@ def build_gather_plan(needed_ids_per_shard: list[np.ndarray],
             shard = np.repeat(np.arange(n, dtype=np.int64), sizes)
         own = owner[flat].astype(np.int64) if flat.size else flat
         remote = own != shard
-        flat, shard, own = flat[remote], shard[remote], own[remote]
-        ukey = np.unique((shard * n + own) * V + flat)
-        g, v_o = np.divmod(ukey, V)            # g = s * n + p
-        s_o, p_o = np.divmod(g, n)
-        # SlotMap wants per-shard segments sorted by id (not by peer);
-        # unique keys, so the default introsort beats a stable sort.
-        order = np.argsort(s_o * V + v_o)      # slotmap-pos -> group-pos
-        u_shard, u_id = s_o[order], v_o[order]
-        sm_scatter = np.empty(order.size, np.int64)
-        sm_scatter[order] = np.arange(order.size)  # group-pos -> slotmap-pos
+        flat, shard = flat[remote], shard[remote]
+        ukey = np.unique(shard * V + flat)
+        u_shard, u_id = np.divmod(ukey, V)
+    u_own = owner[u_id].astype(np.int64)
+
+    # ---- cache split: hits leave the exchange ----
+    c_max = int(cache.c_max) if cache is not None else 0
+    hit = np.zeros(u_id.size, bool)
+    slots_by_id = np.empty(u_id.size, np.int64)
+    starts = np.concatenate(
+        ([0], np.cumsum(np.bincount(u_shard, minlength=n))))
+    if cache is not None and u_id.size:
+        for s in range(n):
+            lo, hi = int(starts[s]), int(starts[s + 1])
+            if hi == lo:
+                continue
+            h, cslot = cache.hit_split(s, u_id[lo:hi])
+            hit[lo:hi] = h
+            idx = np.nonzero(h)[0] + lo
+            slots_by_id[idx] = local_rows + cslot[h]
+    cache_hits = np.bincount(u_shard[hit], minlength=n).astype(np.int64)
+
+    # ---- misses: group by (shard, peer, id) and build the exchange ----
+    miss_pos = np.nonzero(~hit)[0]
+    s_m, p_m, v_m = u_shard[miss_pos], u_own[miss_pos], u_id[miss_pos]
+    # a stable argsort over the small-range (shard, peer) key keeps ids
+    # ascending within each (s, p) group
+    order = np.argsort(s_m * n + p_m, kind="stable")
+    s_o, p_o, v_o = s_m[order], p_m[order], v_m[order]
 
     counts = np.bincount(s_o * n + p_o,
                          minlength=n * n).reshape(n, n).astype(np.int64)
@@ -249,24 +291,22 @@ def build_gather_plan(needed_ids_per_shard: list[np.ndarray],
         raise PlanOverflow("r_max", int(counts.max()), int(r_max))
 
     # j-th id of a (s, p) group lands in req[s, p, j] and workspace slot
-    # local_rows + p*r_max + j.
+    # local_rows + c_max + p*r_max + j.
     group_start = np.concatenate(
         ([0], np.cumsum(counts.reshape(-1))))[:-1]
     j = np.arange(s_o.size, dtype=np.int64) - group_start[s_o * n + p_o]
 
     req = np.zeros((n, n, r_max), np.int32)
     req[s_o, p_o, j] = local_idx[v_o]
-    slot = local_rows + p_o * r_max + j
 
-    # slots aligned back to the (shard, id)-sorted SlotMap layout
-    slots_by_id = np.empty(slot.size, np.int64)
-    slots_by_id[sm_scatter] = slot
-    starts = np.concatenate(
-        ([0], np.cumsum(np.bincount(u_shard, minlength=n))))
+    # miss slots aligned back to the (shard, id)-sorted SlotMap layout
+    slots_by_id[miss_pos[order]] = local_rows + c_max + p_o * r_max + j
 
     return GatherPlan(req=req, req_count=counts, r_max=r_max,
                       slot_map=SlotMap(starts=starts, ids=u_id,
-                                       slots=slots_by_id, num_vertices=V))
+                                       slots=slots_by_id, num_vertices=V),
+                      c_max=c_max,
+                      cache_hits=cache_hits if cache is not None else None)
 
 
 def workspace_indices(hops: list[np.ndarray], shard: int,
@@ -316,21 +356,40 @@ def workspace_indices(hops: list[np.ndarray], shard: int,
 def _reference_build_gather_plan(needed_ids_per_shard: list[np.ndarray],
                                  owner: np.ndarray, local_idx: np.ndarray,
                                  num_shards: int, local_rows: int,
-                                 r_max: int | None = None) -> GatherPlan:
-    """The original dict-based planner, kept verbatim as the parity oracle
-    (and as the 'legacy' side of benchmarks/planning.py). Returns the same
-    GatherPlan structure; its dict-built slot map is converted to a SlotMap
-    at the end so downstream code sees one type."""
+                                 r_max: int | None = None,
+                                 cache: "Optional[CacheIndex]" = None
+                                 ) -> GatherPlan:
+    """The original dict-based planner, kept as the parity oracle (and as
+    the 'legacy' side of benchmarks/planning.py), extended with the same
+    per-vertex cache hit/miss split the vectorized planner performs.
+    Returns the same GatherPlan structure; its dict-built slot map is
+    converted to a SlotMap at the end so downstream code sees one type."""
     n = num_shards
+    c_max = int(cache.c_max) if cache is not None else 0
+    cache_dicts = ([{int(v): int(c) for v, c in zip(cache.ids[s],
+                                                    cache.slots[s])}
+                    for s in range(n)] if cache is not None
+                   else [{} for _ in range(n)])
     uniq = [np.unique(ids[owner[ids] != s]) if np.asarray(ids).size
             else np.zeros(0, np.int64)
             for s, ids in enumerate(needed_ids_per_shard)]
+    hits: list[list[int]] = [[] for _ in range(n)]
+    misses: list[np.ndarray] = []
+    for s in range(n):
+        keep = []
+        for v in uniq[s]:
+            if int(v) in cache_dicts[s]:
+                hits[s].append(int(v))
+            else:
+                keep.append(int(v))
+        misses.append(np.asarray(keep, np.int64))
     per_peer: list[list[np.ndarray]] = []
     counts = np.zeros((n, n), np.int64)
     for s in range(n):
         row = []
         for p in range(n):
-            ids = uniq[s][owner[uniq[s]] == p] if p != s else np.zeros(0, np.int64)
+            ids = misses[s][owner[misses[s]] == p] if p != s \
+                else np.zeros(0, np.int64)
             row.append(ids)
             counts[s, p] = ids.size
         per_peer.append(row)
@@ -343,15 +402,21 @@ def _reference_build_gather_plan(needed_ids_per_shard: list[np.ndarray],
     slot_of: list[dict[int, int]] = []
     for s in range(n):
         m: dict[int, int] = {}
+        for v in hits[s]:
+            m[v] = local_rows + cache_dicts[s][v]
         for p in range(n):
             ids = per_peer[s][p]
             req[s, p, :ids.size] = local_idx[ids]
-            base = local_rows + p * r_max
+            base = local_rows + c_max + p * r_max
             for jj, v in enumerate(ids):
                 m[int(v)] = base + jj
         slot_of.append(m)
     plan = GatherPlan(req=req, req_count=counts, r_max=r_max,
-                      slot_map=_slot_map_from_dicts(slot_of))
+                      slot_map=_slot_map_from_dicts(slot_of),
+                      c_max=c_max,
+                      cache_hits=(np.asarray([len(h) for h in hits],
+                                             np.int64)
+                                  if cache is not None else None))
     plan._slot_dicts = slot_of   # legacy translation path (benchmarks)
     return plan
 

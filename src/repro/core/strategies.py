@@ -89,9 +89,23 @@ class IterationPlan:
     true_counts: np.ndarray              # (T, N) roots per (step, shard)
     assignment: AssignmentMatrix
 
+    # --- remote-feature cache (repro.cache; defaults = cache off) ---
+    c_max: int = 0                       # cached workspace region height
+    cache_version: int = -1              # CacheStore version planned against
+    cache_hit_rows: int = 0              # deduped remote rows served locally
+    remote_ids: Optional[list] = None    # per-shard deduped remote ids the
+    #                                      iteration requested (hits+misses)
+    #                                      — what a trailing LFU observes
+
     def miss_rate(self) -> float:
         """Remote fraction of unique feature rows (paper Fig. 14)."""
         return self.remote_rows_exact / max(self.unique_rows, 1)
+
+    def cache_hit_rate(self) -> float:
+        """Of the deduped remote rows this iteration needs, the fraction
+        served from the resident cache instead of the fabric."""
+        denom = self.cache_hit_rows + self.remote_rows_exact
+        return self.cache_hit_rows / max(denom, 1)
 
     def miss_rate_per_request(self) -> float:
         """Fig. 14's cache view: of all feature *requests* (one per unique
@@ -104,6 +118,22 @@ class IterationPlan:
         return dict(req=self.req, step_req=self.step_req,
                     hop_idx=list(self.hop_idx), labels=self.labels,
                     weights=self.weights)
+
+
+def _pad_tree_block(blk: TreeBlock, batch_pad: int,
+                    pad_vertex: int) -> TreeBlock:
+    """Pad a sampled block to ``batch_pad`` roots with a constant local
+    vertex at every position of every padded subtree (weight-0 rows; see
+    plan_iteration). True-root hops are shared, not copied."""
+    k = blk.batch_size
+    if k == batch_pad:
+        return blk
+    f = blk.fanout
+    hops = [np.concatenate(
+        [ids, np.full((batch_pad - k) * f ** h, pad_vertex, ids.dtype
+                      if ids.size else np.int64)])
+        for h, ids in enumerate(blk.hops)]
+    return TreeBlock(hops=hops, fanout=f)
 
 
 def _assignment_for(strategy: Strategy, roots_per_model, part,
@@ -135,6 +165,8 @@ def plan_iteration(graph: CSRGraph,
                    sample_seed: Optional[int] = None,
                    batch_pad: Optional[int] = None,
                    r_max: Optional[int] = None,
+                   c_max: Optional[int] = None,
+                   cache_index=None,
                    executor: Optional[Executor] = None) -> IterationPlan:
     """Compile one training iteration into an IterationPlan.
 
@@ -149,7 +181,19 @@ def plan_iteration(graph: CSRGraph,
     stateful ``rng`` is not thread-safe, so with ``rng`` sampling stays
     serial and only the translation parallelizes. Results are independent
     of the executor (same blocks, same arrays, deterministic order).
+
+    ``cache_index``: resident remote-feature cache (repro.cache.CacheIndex);
+    needed remote ids split into cache hits (read from the device-resident
+    cached region) and misses (shipped via all_to_all). ``c_max`` is the
+    shape *budget* for the cached region — the plan's actual cached height
+    always equals the index's own padded ``c_max``; a budget smaller than
+    that raises :class:`PlanOverflow` so repro.train's ShapeBudget can
+    re-bucket explicitly (the compile-once contract extended to cache
+    growth).
     """
+    if cache_index is not None and c_max is not None \
+            and cache_index.c_max > c_max:
+        raise PlanOverflow("c_max", int(cache_index.c_max), int(c_max))
     if sample_seed is None:
         rng = rng or np.random.default_rng(0)
     n = len(roots_per_model)
@@ -163,8 +207,15 @@ def plan_iteration(graph: CSRGraph,
                                       for r in roots_per_model], part, assignment)
     T = amat.num_steps
 
-    # Padding roots must be *local* to their shard so they add no phantom
-    # remote traffic; precompute one local vertex per shard.
+    # Padding roots must add no phantom remote traffic: each (shard, step)
+    # block is sampled over its *true* roots only and then padded with a
+    # constant local vertex at every tree position (not with the pad
+    # vertex's real sampled neighborhood, which could be remote). The
+    # stateless sampler makes a root's subtree independent of its batch
+    # position, so true-root trees are unchanged; padded positions carry
+    # weight 0 and never touch the loss. This also makes planned remote
+    # requests a pure function of (roots, seed) — what the repro.cache
+    # epoch prefetcher predicts.
     pad_vertex = np.zeros(n, np.int64)
     for s in range(n):
         loc = np.nonzero(owner == s)[0]
@@ -176,10 +227,10 @@ def plan_iteration(graph: CSRGraph,
     if counts.max() > batch_pad:
         raise PlanOverflow("batch_pad", int(counts.max()), int(batch_pad))
 
-    # ---- sample one padded TreeBlock per (shard, step) ----
+    # ---- sample one TreeBlock per (shard, step), pad with local rows ----
     lab_arr = np.zeros((n, T, batch_pad), np.int32)
     w_arr = np.zeros((n, T, batch_pad), np.float32)
-    jobs = []                                   # (s, t, padded_roots, k)
+    jobs = []                                   # (s, t, true_roots, k)
     for s in range(n):
         for t in range(T):
             roots = amat.roots_at(s, t)
@@ -187,9 +238,7 @@ def plan_iteration(graph: CSRGraph,
             if k:
                 lab_arr[s, t, :k] = labels[roots]
                 w_arr[s, t, :k] = 1.0
-            padded = np.concatenate(
-                [roots, np.full(batch_pad - k, pad_vertex[s], np.int64)])
-            jobs.append((s, t, padded, k))
+            jobs.append((s, t, roots, k))
 
     sample_exec = executor if sample_seed is not None else None
     blks = _pmap(sample_exec,
@@ -199,9 +248,9 @@ def plan_iteration(graph: CSRGraph,
     blocks: list[list[TreeBlock]] = [[None] * T for _ in range(n)]  # [s][t]
     true_root_blocks: list[TreeBlock] = []      # unpadded, for accounting
     for (s, t, _, k), blk in zip(jobs, blks):
-        blocks[s][t] = blk
+        blocks[s][t] = _pad_tree_block(blk, batch_pad, pad_vertex[s])
         if k:
-            true_root_blocks.append(blk.select(np.arange(k)))
+            true_root_blocks.append(blk)
 
     # ---- gather plans ----
     def shard_needed(s: int, ts: Sequence[int]) -> np.ndarray:
@@ -213,9 +262,11 @@ def plan_iteration(graph: CSRGraph,
 
     if pregather:
         plan = build_gather_plan([shard_needed(s, range(T)) for s in range(n)],
-                                 owner, local_idx, n, local_rows, r_max)
+                                 owner, local_idx, n, local_rows, r_max,
+                                 cache=cache_index)
         req, step_req = plan.req, None
         r_max_eff = plan.r_max
+        c_max_eff = plan.c_max
 
         def translate_shard(s: int) -> None:
             # writes land in disjoint (s, t) slices — thread-safe fan-out
@@ -227,17 +278,25 @@ def plan_iteration(graph: CSRGraph,
 
         _pmap(executor, translate_shard, list(range(n)))
         remote_exact = plan.remote_rows_exact()
+        cache_hit_rows = plan.cache_hit_rows()
+        # only trailing-LFU observation consumes remote_ids; don't tax the
+        # cache-off planning hot path with the copies
+        remote_ids = ([plan.slot_map.shard_ids(s).copy() for s in range(n)]
+                      if cache_index is not None else None)
     else:
         # per-step exchange: dedup within a step only — redundant fetches
-        # across steps remain (that is exactly what §5.2 eliminates).
+        # across steps remain (that is exactly what §5.2 eliminates). A
+        # resident cache still dedups across steps implicitly: a cached
+        # vertex is a hit at *every* step that touches it.
         step_plans = _pmap(
             executor,
             lambda t: build_gather_plan([shard_needed(s, [t])
                                          for s in range(n)],
                                         owner, local_idx, n, local_rows,
-                                        r_max),
+                                        r_max, cache=cache_index),
             list(range(T)))
         r_max_eff = r_max or max(p.r_max for p in step_plans)
+        c_max_eff = step_plans[0].c_max if step_plans else 0
         if any(p.req_count.max() > r_max_eff for p in step_plans):
             raise PlanOverflow(
                 "r_max", int(max(p.req_count.max() for p in step_plans)),
@@ -249,7 +308,7 @@ def plan_iteration(graph: CSRGraph,
             if p.r_max != r_max_eff:   # rebuild with the common r_max
                 p = build_gather_plan([shard_needed(s, [t]) for s in range(n)],
                                       owner, local_idx, n, local_rows,
-                                      r_max_eff)
+                                      r_max_eff, cache=cache_index)
                 step_plans[t] = p
             step_req[:, t] = p.req
             for s in range(n):
@@ -261,6 +320,12 @@ def plan_iteration(graph: CSRGraph,
         _pmap(executor, translate_step, list(range(T)))
         req = np.zeros((n, n, r_max_eff), np.int32)  # unused in per-step mode
         remote_exact = sum(p.remote_rows_exact() for p in step_plans)
+        cache_hit_rows = sum(p.cache_hit_rows() for p in step_plans)
+        remote_ids = ([
+            np.unique(np.concatenate(
+                [p.slot_map.shard_ids(s) for p in step_plans]
+                or [np.zeros(0, np.int64)]))
+            for s in range(n)] if cache_index is not None else None)
 
     # ---- accounting over true (unpadded) roots ----
     total_rows = sum(b.num_feature_rows() for b in true_root_blocks)
@@ -294,4 +359,8 @@ def plan_iteration(graph: CSRGraph,
         remote_rows_exact=remote_exact, remote_rows_nodedup=remote_nodedup,
         total_rows=total_rows, unique_rows=unique_rows,
         step_unique_rows=step_unique,
-        true_counts=counts, assignment=amat)
+        true_counts=counts, assignment=amat,
+        c_max=c_max_eff,
+        cache_version=(cache_index.version if cache_index is not None
+                       else -1),
+        cache_hit_rows=cache_hit_rows, remote_ids=remote_ids)

@@ -55,6 +55,8 @@ def main() -> None:
 
     table = jax.ShapeDtypeStruct((n, args.local_rows, args.feature_dim),
                                  jnp.float32)
+    # no resident remote-feature cache in the dry-run: height-0 cached region
+    cache = jax.ShapeDtypeStruct((n, 0, args.feature_dim), jnp.float32)
     dev = dict(
         req=jax.ShapeDtypeStruct((n, n, args.r_max), jnp.int32),
         step_req=None,
@@ -66,7 +68,7 @@ def main() -> None:
 
     fn = make_sharded_iteration(cfg, pregather=True, mesh=mesh)
     denom = jax.ShapeDtypeStruct((), jnp.float32)
-    lowered = fn.lower(params, table, dev, denom)
+    lowered = fn.lower(params, table, cache, dev, denom)
     compiled = lowered.compile()
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()

@@ -1,13 +1,15 @@
 """repro.train — compile-once training loop for the LeapGNN engine.
 
-Shape budgets (quantized device shapes, one bucket per merge pattern), a
-prefetching double-buffered planner backed by a multi-core planning thread
-pool, the §5.3 merging controller with a compile-free timing signal, eval,
-and checkpoint/resume — one Trainer instead of per-file hand-rolled epoch
-loops. See loop.py for the design notes, including the planning-pool
-contract; the vectorized host planner itself (SlotMap layout: per-shard
-id-sorted segments + cached dense translation rows) lives in
-repro.core.pregather.
+Shape budgets (quantized device shapes, one bucket per merge pattern plus
+the global cache height c_max), a prefetching double-buffered planner
+backed by a multi-core planning thread pool, the §5.3 merging controller
+with a compile-free timing signal, the repro.cache remote-feature cache
+(policy-driven resident hot rows, deterministic epoch prefetch, refresh
+off the critical path), eval, and checkpoint/resume — one Trainer instead
+of per-file hand-rolled epoch loops. See loop.py for the design notes,
+including the planning-pool contract; the vectorized host planner itself
+(SlotMap layout: per-shard id-sorted segments + cached dense translation
+rows) lives in repro.core.pregather.
 """
 from repro.train.budget import ShapeBudget, next_bucket
 from repro.train.loop import EpochStats, Trainer, merging_walk

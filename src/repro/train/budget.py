@@ -23,6 +23,13 @@ global bucket would retrace *every* pattern and, worse, reverting the merge
 would keep the oversized shapes forever. With per-pattern buckets a §5.3
 examination walk (T → T-1 → revert to T) reuses the T bucket untouched:
 pattern changes never force a global re-bucket.
+
+``c_max`` — the height of the cached workspace region a plan was built
+against (repro.cache) — is a third budgeted dimension, but a *global* one:
+the cache store is shared across merge patterns, so its shape is too. The
+planner raises ``PlanOverflow("c_max", ...)`` when a cache index outgrows
+the budget (a store re-pad after cache-size drift) and :meth:`grow`
+re-buckets it explicitly, exactly like the other two dimensions.
 """
 from __future__ import annotations
 
@@ -49,6 +56,7 @@ class ShapeBudget:
 
     batch_pad: int = 0
     r_max: int = 0
+    c_max: int = 0            # cached-region height (global, not per-pattern)
     min_batch_pad: int = 8
     min_r_max: int = 8
     max_rebuckets: int = 8
@@ -76,6 +84,10 @@ class ShapeBudget:
             self.batch_pad = next_bucket(needed, self.batch_pad + 1)
         elif field == "r_max":
             self.r_max = next_bucket(needed, self.r_max + 1)
+        elif field == "c_max":
+            # global (cross-pattern) dimension — see module doc
+            self.c_max = next_bucket(needed, self.c_max + 1)
+            return
         else:
             raise ValueError(f"unknown budget field {field!r}")
         if self._active_key is not None:
@@ -125,14 +137,23 @@ class ShapeBudget:
             self.buckets[key] = bucket
         self._active_key = key
         self.batch_pad, self.r_max = bucket
+        # c_max ceiling only applies to cache-aware plans; passing 0/None
+        # lets the first such plan teach the budget its height.
+        cache_kw = {}
+        if plan_kwargs.get("cache_index") is not None:
+            cache_kw = dict(c_max=self.c_max or None)
         for _ in range(self.max_rebuckets + 1):
             try:
                 out = planner(**plan_kwargs, batch_pad=self.batch_pad,
-                              r_max=self.r_max)
+                              r_max=self.r_max, **cache_kw)
                 self.plans_built += 1
+                if getattr(out, "c_max", 0) > self.c_max:
+                    self.c_max = int(out.c_max)    # first learn, no rebucket
                 return out
             except PlanOverflow as e:
                 self.grow(e.field, e.needed)
+                if e.field == "c_max":
+                    cache_kw = dict(c_max=self.c_max)
         raise RuntimeError(
             f"shape budget failed to converge after {self.max_rebuckets} "
             f"re-buckets (batch_pad={self.batch_pad}, r_max={self.r_max})")

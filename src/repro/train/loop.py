@@ -20,6 +20,15 @@ to hand-roll per file:
   timing signal: steady-state device time per epoch, computed by excluding
   iterations on which the engine's trace log recorded an XLA (re)trace.
   Epoch wall time with compilation in it inverts the paper's signal.
+* **Remote-feature cache** — an optional repro.cache layer
+  (``cache_policy=\"degree\"|\"lfu\"``, ``cache_budget_bytes``): per-shard
+  hot remote rows stay device-resident, the planner splits needed ids into
+  cache hits and misses, and the deterministic sampler lets next epoch's
+  hot set be precomputed and the store refreshed off the critical path
+  (``cache_prefetch``). The store is pre-sized to the byte budget's
+  power-of-two row bucket, so content refreshes never change device shapes
+  — the compile-once contract holds across refreshes.
+
 * **Eval + checkpoint/resume** — iteration-boundary checkpoints of
   (params, optimizer state, merge pattern) and tree-block evaluation using
   features gathered back out of the sharded table.
@@ -74,6 +83,12 @@ class EpochStats:
     #                             overlaps device time, so it only costs
     #                             wall-clock when it exceeds the device time)
     plans_built: int = 0        # plans constructed during this epoch
+    # --- remote-feature cache (repro.cache; zeros when cache is off) ---
+    cache_hit_rows: int = 0     # Σ plan.cache_hit_rows (deduped hits)
+    cache_hit_rate: float = 0.0  # hits / (hits + misses) over the epoch
+    cache_bytes_saved: int = 0  # hit rows × row bytes (gross fabric savings)
+    cache_refresh_s: float = 0.0  # blocking refresh time at the epoch
+    #                               boundary (prefetch overlap already taken)
 
 
 class Trainer:
@@ -97,7 +112,10 @@ class Trainer:
                  sample_seed_base: int = 0,
                  init_seed: int = 0,
                  ckpt_dir: Optional[str] = None,
-                 ckpt_keep: int = 3):
+                 ckpt_keep: int = 3,
+                 cache_policy: Optional[str] = None,
+                 cache_budget_bytes: int = 0,
+                 cache_prefetch: bool = True):
         self.graph = graph
         self.labels = np.asarray(labels)
         self.part = np.asarray(part)
@@ -150,6 +168,41 @@ class Trainer:
         self._plan_time_lock = threading.Lock()
         self._plan_time_acc = 0.0
         self._plans_built_acc = 0
+        # --- remote-feature cache (repro.cache) ---
+        self.cache_policy_name = cache_policy
+        self.cache_prefetch = bool(cache_prefetch)
+        self.cache_rows = 0
+        self.cache_store = None
+        self._cache_policy = None
+        self._cache_prefetcher = None
+        self._cache_lock = threading.Lock()
+        self._cache_fut = None
+        if cache_policy:
+            from repro.cache import (CacheStore, EpochPrefetcher,
+                                     budget_rows, make_policy)
+            from repro.train.budget import next_bucket
+            d = int(self._table_np.shape[-1])
+            self.cache_rows = budget_rows(cache_budget_bytes, d,
+                                          self._table_np.dtype.itemsize)
+            if self.cache_rows > 0:
+                # pre-size to the budget's pow2 bucket: a cold (even empty)
+                # cache already has its final device shape, so content
+                # refreshes never retrace
+                self.cache_store = CacheStore(
+                    self.num_shards, d, c_max=next_bucket(self.cache_rows),
+                    dtype=self._table_np.dtype)
+                self._cache_policy = make_policy(
+                    cache_policy, graph=self.graph, owner=self.owner,
+                    num_shards=self.num_shards)
+                self._cache_prefetcher = EpochPrefetcher(
+                    graph=self.graph, part=self.part, owner=self.owner,
+                    num_shards=self.num_shards,
+                    num_layers=self.cfg.num_layers, fanout=self.cfg.fanout,
+                    roots_for=self._prefetch_roots_for,
+                    sample_seed_for=lambda e, i:
+                        self.sample_seed_base + e * 10_000 + i,
+                    strategy=self.strategy)
+                self._prefetch_batch = 0   # bound per fit() call
 
     @classmethod
     def from_env(cls, env: dict, cfg: GNNConfig, **kw) -> "Trainer":
@@ -203,6 +256,8 @@ class Trainer:
         t0 = time.perf_counter()
         roots = self._roots_for(epoch, it, batch_per_model)
         assignment = self._assignment_for(roots)
+        cache_index = (self.cache_store.index
+                       if self.cache_store is not None else None)
         plan = self.budget.plan(
             graph=self.graph, labels=self.labels, part=self.part,
             owner=self.owner, local_idx=self.local_idx,
@@ -210,8 +265,16 @@ class Trainer:
             roots_per_model=roots, num_layers=self.cfg.num_layers,
             fanout=self.cfg.fanout, strategy=self.strategy,
             pregather=self.pregather, assignment=assignment,
+            cache_index=cache_index,
             executor=self._get_plan_pool(),
             sample_seed=self.sample_seed_base + epoch * 10_000 + it)
+        if self._cache_policy is not None and not self._cache_policy.static \
+                and not self.cache_prefetch and plan.remote_ids is not None:
+            # trailing-LFU mode: learn frequencies from the requests the
+            # plans actually made (prefetch mode predicts them instead)
+            with self._cache_lock:
+                for s in range(self.num_shards):
+                    self._cache_policy.observe(s, plan.remote_ids[s])
         with self._plan_time_lock:
             self._plan_time_acc += time.perf_counter() - t0
             self._plans_built_acc += 1
@@ -238,12 +301,96 @@ class Trainer:
         return out
 
     # ------------------------------------------------------------------
+    # Remote-feature cache (repro.cache)
+    # ------------------------------------------------------------------
+
+    @property
+    def cache_enabled(self) -> bool:
+        return self.cache_store is not None
+
+    def _prefetch_roots_for(self, epoch: int, it: int):
+        """Deterministic root replay for the epoch prefetcher (same draw as
+        build_plan will make — root_fn / (root_seed, epoch, it) seeded)."""
+        return self._roots_for(epoch, it, self._prefetch_batch)
+
+    def _cache_select_install(self, hot=None) -> dict:
+        """Run the admission policy (optionally against predicted hot sets),
+        gather the selected rows from the host feature copy, and install
+        them into the store."""
+        with self._cache_lock:
+            if hot is not None:
+                sel = [self._cache_policy.select(s, self.cache_rows,
+                                                 hot_ids=ids, hot_counts=cnt)
+                       for s, (ids, cnt) in enumerate(hot)]
+            else:
+                sel = [self._cache_policy.select(s, self.cache_rows)
+                       for s in range(self.num_shards)]
+        rows = [self._features_of(ids) for ids in sel]
+        return self.cache_store.install(sel, rows)
+
+    def _cache_compute(self, epoch: int, iters: int):
+        """Cache-thread job: predict epoch's requests (deterministic
+        sampler), select the cached set, gather its rows. Returns the
+        ready-to-install (ids, rows) pair."""
+        hot = self._cache_prefetcher.epoch_requests(epoch, iters)
+        with self._cache_lock:
+            sel = [self._cache_policy.select(s, self.cache_rows,
+                                             hot_ids=ids, hot_counts=cnt)
+                   for s, (ids, cnt) in enumerate(hot)]
+        rows = [self._features_of(ids) for ids in sel]
+        return sel, rows
+
+    def _cache_epoch_begin(self, epoch: int, first_epoch: int, epochs: int,
+                           iters: int, batch_per_model: int,
+                           cache_exec) -> float:
+        """Refresh the store at the epoch boundary (plans for this epoch
+        are built only after this returns) and schedule the next epoch's
+        prefetch. Returns the *blocking* refresh seconds — prefetch work
+        that overlapped the previous epoch's device time costs nothing
+        here."""
+        if not self.cache_enabled:
+            return 0.0
+        t0 = time.perf_counter()
+        self._prefetch_batch = batch_per_model
+        if self._cache_fut is not None:
+            ids, rows = self._cache_fut.result()
+            self._cache_fut = None
+            self.cache_store.install(ids, rows)
+        elif epoch == first_epoch and self._cache_policy.static:
+            # degree policy: one static selection, installed before the
+            # first plan and never refreshed
+            self._cache_select_install()
+        elif not self._cache_policy.static and cache_exec is None \
+                and epoch > first_epoch:
+            # trailing LFU (prefetch off): select from frequencies observed
+            # in earlier epochs' plans
+            self._cache_select_install()
+        if cache_exec is not None and not self._cache_policy.static \
+                and epoch + 1 < epochs:
+            self._cache_fut = cache_exec.submit(self._cache_compute,
+                                                epoch + 1, iters)
+        # force the host→device upload NOW so it lands in cache_refresh_s,
+        # not inside the first (steady-timed) train_step of the epoch
+        self.cache_store.device_table
+        return time.perf_counter() - t0
+
+    # ------------------------------------------------------------------
     # Device stepping
     # ------------------------------------------------------------------
 
     def train_step(self, plan: IterationPlan):
+        cache_tab = None
+        if plan.c_max:
+            store = self.cache_store
+            if store is None or plan.cache_version != store.version:
+                raise RuntimeError(
+                    f"stale cache plan: plan version {plan.cache_version} "
+                    f"vs store "
+                    f"{store.version if store is not None else 'absent'}")
+            cache_tab = store.device_table
         grads, loss = engine.run_iteration(self.params, self.table, plan,
-                                           self.cfg, mesh=self.mesh)
+                                           self.cfg, mesh=self.mesh,
+                                           cache=cache_tab)
         self.params, self.opt_state = self.optimizer.update(
             grads, self.opt_state, self.params)
         self.global_step += 1
@@ -275,13 +422,23 @@ class Trainer:
         stats: list[EpochStats] = []
         pool = ThreadPoolExecutor(max_workers=1) if self._prefetch else None
         submit = pool.submit if pool is not None else self._run_inline
+        # the cache refresh computation gets its own thread: it must not
+        # block the plan double-buffer (and vice versa)
+        cache_exec = (ThreadPoolExecutor(max_workers=1,
+                                         thread_name_prefix="cache")
+                      if self.cache_enabled and self.cache_prefetch
+                      and not self._cache_policy.static else None)
         try:
             for epoch in range(start_epoch, epochs):
+                refresh_s = self._cache_epoch_begin(
+                    epoch, start_epoch, epochs, iters_per_epoch,
+                    batch_per_model, cache_exec)
                 t_epoch = time.perf_counter()
                 fut = submit(self.build_plan, epoch, 0, batch_per_model)
                 iter_times: list[float] = []
                 traced: list[bool] = []
                 loss_sum, remote, num_steps = 0.0, 0, 0
+                cache_hits = 0
                 for it in range(iters_per_epoch):
                     plan = fut.result()
                     if it + 1 < iters_per_epoch:
@@ -295,6 +452,7 @@ class Trainer:
                     iter_times.append(time.perf_counter() - t0)
                     traced.append(engine.trace_count() > tc0)
                     remote += plan.remote_rows_exact
+                    cache_hits += plan.cache_hit_rows
                     num_steps = plan.num_steps
                 dt = time.perf_counter() - t_epoch
                 steady = [t for t, tr in zip(iter_times, traced) if not tr]
@@ -307,6 +465,8 @@ class Trainer:
                        if eval_every and (epoch + 1) % eval_every == 0
                        else None)
                 plan_time, plans_built = self._drain_plan_stats()
+                row_bytes = (int(self._table_np.shape[-1])
+                             * self._table_np.dtype.itemsize)
                 st = EpochStats(epoch=epoch,
                                 loss=loss_sum / iters_per_epoch,
                                 time_s=dt, steady_time_s=steady_epoch,
@@ -314,7 +474,12 @@ class Trainer:
                                 num_steps=num_steps, remote_rows=remote,
                                 acc=acc, compile_free=bool(steady),
                                 plan_time_s=plan_time,
-                                plans_built=plans_built)
+                                plans_built=plans_built,
+                                cache_hit_rows=cache_hits,
+                                cache_hit_rate=cache_hits
+                                / max(cache_hits + remote, 1),
+                                cache_bytes_saved=cache_hits * row_bytes,
+                                cache_refresh_s=refresh_s)
                 stats.append(st)
                 if log is not None:
                     log(f"epoch {epoch}: loss {st.loss:.4f} "
@@ -322,6 +487,9 @@ class Trainer:
                         f"traces {st.traces} wall {st.time_s:.2f}s "
                         f"steady {st.steady_time_s:.2f}s "
                         f"plan {st.plan_time_s:.2f}s"
+                        + (f" cache-hit {100 * st.cache_hit_rate:.1f}%"
+                           f" refresh {st.cache_refresh_s:.2f}s"
+                           if self.cache_enabled else "")
                         + ("" if st.compile_free else " (all-compile)")
                         + (f" acc {100 * acc:.1f}%" if acc is not None
                            else ""))
@@ -329,6 +497,9 @@ class Trainer:
         finally:
             if pool is not None:
                 pool.shutdown(wait=False, cancel_futures=True)
+            if cache_exec is not None:
+                cache_exec.shutdown(wait=False, cancel_futures=True)
+                self._cache_fut = None
             self._close_plan_pool()
         return stats
 

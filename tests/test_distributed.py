@@ -118,12 +118,13 @@ def test_shard_map_matches_emulation_per_step():
     assert res["dmax"] == 0.0
 
 
-def test_per_step_iteration_runs_T_plus_1_all_to_alls():
-    """Acceptance: the batched index exchange makes per-step mode run
-    exactly T+1 all_to_alls per iteration (T feature returns + 1 batched
-    index shipment; the seed ran 2T), and pregather mode exactly 2.
-    Trace-only (jax.make_jaxpr — no compile, no execution), so the
-    subprocess is cheap enough for the tier-1 lane."""
+def test_per_step_iteration_collective_counts():
+    """Acceptance: the batched index exchange makes unfolded per-step mode
+    run exactly T+1 all_to_alls per iteration (T feature returns + 1
+    batched index shipment; the seed ran 2T); folding the feature returns
+    (serve_features_batched) brings it to exactly 2 — the same count as
+    pregather mode. Trace-only (jax.make_jaxpr — no compile, no
+    execution), so the subprocess is cheap enough for the tier-1 lane."""
     res = _run_subprocess("""
         import json
         import numpy as np, jax, jax.numpy as jnp
@@ -145,23 +146,28 @@ def test_per_step_iteration_runs_T_plus_1_all_to_alls():
                         num_classes=ds.num_classes, fanout=2)
         params = init_gnn(jax.random.PRNGKey(0), cfg)
         mesh = jax.make_mesh((n,), ('data',))
+        cache = jnp.zeros((n, 0, ds.feature_dim), jnp.float32)
         out = {}
-        for pregather in (False, True):
+        for key, pregather, fold in (('per_step', False, False),
+                                     ('per_step_folded', False, True),
+                                     ('pregather', True, False)):
             plan = plan_iteration(ds.graph, ds.labels, part, owner,
                                   local_idx, table.shape[1], roots,
                                   num_layers=2, fanout=2,
                                   strategy='hopgnn', pregather=pregather,
                                   sample_seed=3)
-            fn = engine.get_compiled_iteration(cfg, pregather, mesh=mesh)
+            fn = engine.get_compiled_iteration(cfg, pregather, mesh=mesh,
+                                               fold_returns=fold)
             dev = jax.tree.map(jnp.asarray, plan.device_args())
             c = engine.collective_counts(fn, params, jnp.asarray(table),
-                                         dev, jnp.asarray(1.0, jnp.float32))
-            key = 'pregather' if pregather else 'per_step'
+                                         cache, dev,
+                                         jnp.asarray(1.0, jnp.float32))
             out[key] = c.get('all_to_all', 0)
             out['T'] = plan.num_steps
         print('RESULT:' + json.dumps(out))
     """, devices=4)
     assert res["per_step"] == res["T"] + 1      # was 2T before batching
+    assert res["per_step_folded"] == 2          # T feature returns folded
     assert res["pregather"] == 2
 
 
