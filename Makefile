@@ -3,7 +3,8 @@
 PYTHON ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test test-all bench-smoke bench-plan bench-cache train-smoke
+.PHONY: test test-all bench-smoke bench-plan bench-cache bench-pipeline \
+        train-smoke
 
 # Fast lane (tier-1): everything except @pytest.mark.slow (pyproject default)
 test:
@@ -26,6 +27,14 @@ bench-plan:
 # (writes BENCH_cache.json at the repo root)
 bench-cache:
 	$(PYTHON) -m benchmarks.cache
+
+# Async-pipeline A/B smoke: measured steady wall + host-overhead gap,
+# legacy loop vs fused/non-blocking/ping-pong-uploaded pipeline, plus the
+# emulated 8-shard ≤½-wall gate case (writes BENCH_pipeline.json; the full
+# end_to_end suite in `bench-smoke` emits the same cases into
+# BENCH_end_to_end.json alongside the comm-model decomposition)
+bench-pipeline:
+	$(PYTHON) -m benchmarks.end_to_end --measured-only
 
 # 3-epoch compile-once smoke train (prints first vs steady epoch times)
 train-smoke:

@@ -15,7 +15,16 @@ gathering is 44–83 % of step time).
 A second, *measured* section runs a small real training through the
 repro.train Trainer and reports first-epoch (compile-inclusive) vs
 steady-state iteration times plus the jit trace count — the compile-once
-claim as wall-clock, not a model.
+claim as wall-clock, not a model. It is an A/B over the async device
+pipeline: the same training runs once through the pre-pipeline loop
+(grads round-trip, eager optimizer, per-iteration loss sync) and once
+through the pipelined loop (fused donated step, non-blocking dispatch,
+committed plan uploads, K-stacked dispatch), and the host-overhead gap
+``steady_iter_ms − steady_device_iter_ms`` is reported for both. The CI
+gate requires pipelined steady wall ≤ ½ of unpipelined on the emulated
+8-shard config.
+
+    python -m benchmarks.end_to_end [--measured-only]
 """
 from __future__ import annotations
 
@@ -48,7 +57,124 @@ def _iter_flops(plan, cfg) -> float:
     return total
 
 
-def run(quick=True):
+def _ab(env, cfg, epochs, iters, batch, stack):
+    """One pipeline A/B: identical training through the pre-PR5 loop
+    (eager optimizer update, per-iteration float(loss) sync, per-call
+    device uploads) and the async pipeline (fused donated step,
+    non-blocking dispatch, committed ping-pong uploads, K-stacked
+    dispatch). Returns (legacy stats, pipelined stats, pipelined traces).
+    """
+    def fit(**kw):
+        tc0 = engine.trace_count()
+        trainer = Trainer.from_env(env, cfg, optimizer=adam(5e-3),
+                                   merging=False, **kw)
+        stats = trainer.fit(epochs=epochs, iters_per_epoch=iters,
+                            batch_per_model=batch)
+        return stats, engine.trace_count() - tc0
+
+    stats_u, _ = fit(pipeline=False, fused=False)
+    stats_p, traces_p = fit(pipeline=True, pipeline_stack=stack)
+    return stats_u, stats_p, traces_p
+
+
+def _measured(b: Bench) -> None:
+    """Wall-clock section, two configurations.
+
+    ``measured`` — the historical compile-once config (4 shards, scale
+    0.03; the pre-PR5 baseline recorded steady_iter_ms 278.4 here against
+    a 10.5 ms device estimate — the 27× host-overhead gap). steady_iter_ms
+    is the mean steady-epoch wall per iteration through the *pipelined*
+    Trainer; the unpipelined figure and the host-overhead decomposition
+    ride along. steady_device_iter_ms is the device floor of the
+    production step: the fused program run through the *blocking* loop,
+    compile-free iterations only — what an iteration costs when the host
+    adds nothing but one dispatch and one sync.
+
+    ``pipeline8`` — the emulated 8-shard A/B the CI gate reads: a small
+    model (host overhead dominates device time, the regime the pipeline
+    targets), pipelined steady per-iteration wall must be ≤ ½ of
+    unpipelined. Medians over steady epochs (1-core container noise).
+    """
+    env_m = setup(dataset="products", scale=0.03)
+    cfg_m = GNNConfig(model="sage", num_layers=2, hidden_dim=32,
+                      feature_dim=env_m["ds"].feature_dim,
+                      num_classes=env_m["ds"].num_classes, fanout=4)
+    epochs, iters = 4, 8
+    stats_u, stats_p, traces_p = _ab(env_m, cfg_m, epochs, iters,
+                                     batch=8, stack=4)
+    # device floor: the fused step through the blocking loop (host adds
+    # one dispatch + one sync per iteration, nothing else)
+    tr_f = Trainer.from_env(env_m, cfg_m, optimizer=adam(5e-3),
+                            merging=False, pipeline=False, fused=True)
+    stats_f = tr_f.fit(epochs=epochs, iters_per_epoch=iters,
+                       batch_per_model=8)
+
+    def steady_wall_ms(stats):
+        steady = stats[1:]
+        return 1000 * sum(s.time_s for s in steady) / (len(steady) * iters)
+
+    first = stats_p[0]
+    wall_p = steady_wall_ms(stats_p)
+    wall_u = steady_wall_ms(stats_u)
+    dev_ms = 1000 * float(np.median([s.steady_time_s / iters
+                                     for s in stats_f[1:]
+                                     if s.compile_free]))
+    b.emit("measured", "steady_iter_ms", round(wall_p, 2))
+    b.emit("measured", "steady_iter_ms_unpipelined", round(wall_u, 2))
+    b.emit("measured", "steady_device_iter_ms", round(dev_ms, 2))
+    b.emit("measured", "host_overhead_ms",
+           round(max(wall_p - dev_ms, 0.0), 2))
+    b.emit("measured", "host_overhead_ms_unpipelined",
+           round(max(wall_u - dev_ms, 0.0), 2))
+    b.emit("measured", "pipeline_speedup_x", round(wall_u / wall_p, 2))
+    b.emit("measured", "steady_dispatch_iter_ms",
+           round(1000 * float(np.mean([s.dispatch_s / iters
+                                       for s in stats_p[1:]])), 2))
+    b.emit("measured", "first_epoch_iter_ms",
+           round(1000 * first.time_s / iters, 2))
+    b.emit("measured", "jit_traces", traces_p)
+    b.emit("measured", "traces_after_epoch0",
+           sum(s.traces for s in stats_p[1:]))
+    b.emit("measured", "compile_amortization_x",
+           round(first.time_s / max(sum(s.time_s for s in stats_p[1:])
+                                    / len(stats_p[1:]), 1e-9), 1))
+
+    # ---- emulated 8-shard gate config: host-overhead-dominated model ----
+    env_8 = setup(dataset="products", scale=0.03, parts=8)
+    cfg_8 = GNNConfig(model="sage", num_layers=2, hidden_dim=16,
+                      feature_dim=env_8["ds"].feature_dim,
+                      num_classes=env_8["ds"].num_classes, fanout=2)
+    epochs8, iters8 = 5, 16
+    stats_u8, stats_p8, _ = _ab(env_8, cfg_8, epochs8, iters8,
+                                batch=2, stack=8)
+
+    def steady_med_ms(stats):
+        # compile-free steady per-iteration wall (synced window for the
+        # pipelined loop, trace-free iteration walls for the legacy one);
+        # median over steady epochs — 1-core container timings are noisy
+        return 1000 * float(np.median([s.steady_time_s / iters8
+                                       for s in stats[1:]
+                                       if s.compile_free]))
+
+    p8, u8 = steady_med_ms(stats_p8), steady_med_ms(stats_u8)
+    b.emit("pipeline8", "steady_iter_ms", round(p8, 2))
+    b.emit("pipeline8", "steady_iter_ms_unpipelined", round(u8, 2))
+    b.emit("pipeline8", "pipeline_speedup_x", round(u8 / p8, 2))
+    b.emit("pipeline8", "traces_after_epoch0",
+           sum(s.traces for s in stats_p8[1:]))
+    b.emit("pipeline8", "meets_half_gate", int(p8 <= 0.5 * u8))
+
+
+def run(quick=True, measured_only=False):
+    if measured_only:
+        # own bench name: the full suite's BENCH_end_to_end.json (comm-model
+        # decomposition + measured sections) must not be clobbered by the
+        # quick `make bench-pipeline` smoke
+        b = Bench("pipeline")
+        _measured(b)
+        b.save_csv()
+        b.save_json()
+        return b.rows
     b = Bench("end_to_end")
     # scale matters here: on a few-thousand-vertex graph the batch saturates
     # the vertex set and dedup hides the feature traffic the paper measures;
@@ -116,29 +242,8 @@ def run(quick=True):
             speedups[(model, hidden)] = sp
             for k in ("dgl", "p3", "naive"):
                 b.emit(case, f"speedup_vs_{k}", round(sp[k], 2))
-    # ---- measured: compile-once Trainer, first vs steady epoch ----
-    env_m = setup(dataset="products", scale=0.03)
-    cfg_m = GNNConfig(model="sage", num_layers=2, hidden_dim=32,
-                      feature_dim=env_m["ds"].feature_dim,
-                      num_classes=env_m["ds"].num_classes, fanout=4)
-    tc0 = engine.trace_count()
-    trainer = Trainer.from_env(env_m, cfg_m, optimizer=adam(5e-3),
-                               merging=False)
-    iters = 4
-    stats = trainer.fit(epochs=3, iters_per_epoch=iters, batch_per_model=8)
-    first, steady = stats[0], stats[1:]
-    steady_iter = sum(s.time_s for s in steady) / (len(steady) * iters)
-    b.emit("measured", "first_epoch_iter_ms",
-           round(1000 * first.time_s / iters, 2))
-    b.emit("measured", "steady_iter_ms", round(1000 * steady_iter, 2))
-    b.emit("measured", "steady_device_iter_ms",
-           round(1000 * steady[-1].steady_time_s / iters, 2))
-    b.emit("measured", "jit_traces", engine.trace_count() - tc0)
-    b.emit("measured", "traces_after_epoch0",
-           sum(s.traces for s in steady))
-    b.emit("measured", "compile_amortization_x",
-           round(first.time_s / max(sum(s.time_s for s in steady)
-                                    / len(steady), 1e-9), 1))
+    # ---- measured: compile-once Trainer + async-pipeline A/B ----
+    _measured(b)
 
     best_p3 = max(v["p3"] for v in speedups.values())
     b.emit("summary", "best_speedup_vs_p3", round(best_p3, 2))
@@ -152,4 +257,11 @@ def run(quick=True):
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--measured-only", action="store_true",
+                    help="skip the comm-model sweep; run only the measured "
+                         "pipeline A/B (the `make bench-pipeline` target)")
+    args = ap.parse_args()
+    run(quick=not args.full, measured_only=args.measured_only)

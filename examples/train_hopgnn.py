@@ -45,6 +45,12 @@ def main() -> None:
                     choices=["hopgnn", "model_centric", "lo"])
     ap.add_argument("--ckpt-dir", default="/tmp/hopgnn_ckpt")
     ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--no-pipeline", action="store_true",
+                    help="per-iteration blocking loop (pre-PR5 behavior) "
+                         "instead of the async fused pipeline")
+    ap.add_argument("--stack", type=int, default=1,
+                    help="K-stacked scan dispatch (amortizes dispatch "
+                         "overhead when device iterations are tiny)")
     args = ap.parse_args()
     P = PRESETS[args.preset]
 
@@ -60,14 +66,17 @@ def main() -> None:
           f"{model_param_bytes(params) / 1e6:.1f} MB params "
           f"({model_param_bytes(params) / 4 / 1e6:.1f}M)")
 
-    opt = adamw(cosine_schedule(3e-3, warmup=10,
-                                total=P["epochs"] * P["iters"]),
-                weight_decay=1e-4, grad_clip=1.0)
+    total = P["epochs"] * P["iters"]
+    opt = adamw(cosine_schedule(3e-3, warmup=10, total=total),
+                weight_decay=1e-4, grad_clip=1.0,
+                key=("cos", 3e-3, 10, total))   # value identity for the
+    #             engine's fused-step compile cache (schedule isn't hashable)
     trainer = Trainer(
         graph=ds.graph, labels=ds.labels, part=part, owner=owner,
         local_idx=local_idx, table=table, cfg=cfg, optimizer=opt,
         params=params, strategy=args.strategy,
-        train_vertices=ds.train_vertices(), ckpt_dir=args.ckpt_dir)
+        train_vertices=ds.train_vertices(), ckpt_dir=args.ckpt_dir,
+        pipeline=not args.no_pipeline, pipeline_stack=args.stack)
 
     tc0 = engine.trace_count()
     stats = trainer.fit(epochs=P["epochs"], iters_per_epoch=P["iters"],
@@ -85,6 +94,13 @@ def main() -> None:
               f"{engine.trace_count() - tc0} traces total, "
               f"budget {trainer.budget.signature()} "
               f"({trainer.budget.rebuckets} rebuckets)")
+        if first.pipelined:
+            print(f"pipeline: steady "
+                  f"{1000 * rest[-1].steady_time_s / P['iters']:.1f} ms/iter "
+                  f"(synced window), dispatch "
+                  f"{1000 * rest[-1].dispatch_s / P['iters']:.1f} ms/iter, "
+                  f"{trainer._uploader.uploads} committed uploads, "
+                  f"{trainer._uploader.shape_changes} shape changes")
     print(f"done; checkpoints in {args.ckpt_dir}")
 
 

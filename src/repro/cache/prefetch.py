@@ -10,13 +10,18 @@ the host (no device work, runs on the Trainer's cache thread while the
 current epoch executes) and returns per-shard request-frequency tables the
 admission policy turns into the next cached set.
 
-Prediction fidelity: the replay uses the *unmerged* strategy assignment.
-A §5.3 merge moves some merged roots to the hosting server of their target
-step, so under an active merging controller the predicted requesting shard
-can differ for those roots — the cache then simply misses them (misses are
-fetched through the ordinary exchange; correctness is never at stake). With
-merging off — the benchmark configuration — the forecast is exact and a
-covering budget yields a 100% hit rate.
+Prediction fidelity: a §5.3 merge moves some merged roots to the hosting
+server of their target step, so replaying the *unmerged* rotation would
+mispredict the requesting shard for those roots — the cache then simply
+misses them (misses are fetched through the ordinary exchange; correctness
+is never at stake). The ``fold_steps`` hook closes that gap: the Trainer
+wires it to fold each predicted assignment to the merging controller's
+current pattern exactly like build_plan does, so the forecast is exact
+with merging off *and* under a frozen merge with the paper's deterministic
+"min" selector (the RD baseline's random folds consume controller RNG
+state and cannot be replayed ahead of time — those predictions stay
+unfolded). With an exact forecast a covering budget yields a 100% hit
+rate.
 """
 from __future__ import annotations
 

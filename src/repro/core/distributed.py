@@ -38,6 +38,23 @@ the true global batch size is a *traced* scalar (``denom``), so varying
 true batch sizes never retrace. Each (re)trace is appended to a
 module-level trace log, which the repro.train Trainer and the regression
 tests use to assert the compile-once invariant.
+
+Fused train step (async pipeline, repro.train.pipeline): next to the
+grads-returning iteration there is a fused program
+``fn(params, opt_state, table, cache, dev, denom) ->
+(params', opt_state', loss)`` (:func:`get_compiled_train_step`) that folds
+the optimizer update into the same XLA program with buffer donation for
+``params``/``opt_state`` — one dispatch per iteration instead of a grads
+round-trip plus tens of eager optimizer ops. **Donation contract:** the
+caller's ``params``/``opt_state`` buffers are consumed by the call; thread
+the returned trees forward and never reuse the inputs. A ``stacked=True``
+variant scans the fused step over K same-bucket iterations stacked on a
+leading axis, amortizing dispatch when per-iteration device time is tiny.
+
+Argument fast path: :func:`prepare_iteration_args` uploads only host-side
+leaves — device-resident tables/caches pass through untouched, and a plan
+whose device args were pre-committed by the pipeline uploader
+(``plan.committed``) skips the per-leaf conversion walk entirely.
 """
 from __future__ import annotations
 
@@ -331,6 +348,44 @@ def get_compiled_iteration(cfg: GNNConfig, pregather: bool,
     return fn
 
 
+def optimizer_cache_key(optimizer) -> tuple:
+    """Stable compile-cache identity for an optimizer: its declared value
+    ``key`` when it has one (two ``adam(5e-3)`` instances then share one
+    compiled program), else the instance id — safe because the cached
+    callable closes over the optimizer and keeps it alive, so the id can
+    never be recycled while the entry exists. Flip side: an id-keyed entry
+    (schedule lr without an explicit ``key=``) pins its compiled program
+    for the process lifetime — long-running sweeps over many schedule
+    optimizers should pass ``key=`` (see repro.optim.adamw)."""
+    key = getattr(optimizer, "key", None)
+    return key if key is not None else ("optimizer-id", id(optimizer))
+
+
+def get_compiled_train_step(cfg: GNNConfig, pregather: bool, optimizer,
+                            mesh: Optional[Mesh] = None, axis: str = "data",
+                            fold_returns: bool = False,
+                            stacked: bool = False):
+    """Cached *fused* train step: iteration + optimizer update, one program.
+
+    Signature ``fn(params, opt_state, table, cache, dev, denom) ->
+    (params', opt_state', loss)`` with ``params``/``opt_state`` **donated**
+    (the input buffers are consumed — thread the outputs forward, never
+    reuse the inputs). With ``stacked=True`` the signature takes a K-stacked
+    device-arg tree and a ``(K,)`` denom vector and ``lax.scan``s the fused
+    step over the K iterations, returning ``(K,)`` losses — one dispatch
+    for K iterations. jit's shape cache keys on K, so different stack
+    widths coexist without rebuilding."""
+    key = ("fused", cfg, bool(pregather), bool(fold_returns), mesh,
+           axis if mesh is not None else None, optimizer_cache_key(optimizer),
+           bool(stacked))
+    fn = _COMPILE_CACHE.get(key)
+    if fn is None:
+        fn = _build_fused(cfg, pregather, fold_returns, mesh, axis,
+                          optimizer, stacked)
+        _COMPILE_CACHE[key] = fn
+    return fn
+
+
 # ---------------------------------------------------------------------------
 # Public entry points
 # ---------------------------------------------------------------------------
@@ -346,6 +401,59 @@ def resolve_fold_returns(plan, fold_returns: Optional[bool] = None) -> bool:
     return plan.num_steps * plan.r_max <= FOLD_RETURNS_MAX_TR
 
 
+def _as_device(x):
+    """Upload only host-side leaves: device-resident arrays pass through
+    untouched (no per-leaf re-wrap on the hot path)."""
+    return x if isinstance(x, jax.Array) else jnp.asarray(x)
+
+
+# (num_shards, feature_dim, dtype) -> (N, 0, d) device zeros. Cache-off
+# iterations all share one zero-width cache table instead of allocating a
+# fresh one per call (part of the per-iteration host overhead PR 5 removes).
+_EMPTY_CACHE: dict = {}
+
+
+def empty_cache_table(num_shards: int, feature_dim: int, dtype=np.float32):
+    key = (int(num_shards), int(feature_dim), np.dtype(dtype).str)
+    tab = _EMPTY_CACHE.get(key)
+    if tab is None:
+        tab = jnp.zeros((key[0], 0, key[1]), key[2])
+        _EMPTY_CACHE[key] = tab
+    return tab
+
+
+def prepare_iteration_args(table_global, plan, cache=None):
+    """Shared argument prep for :func:`run_iteration` /
+    :func:`run_train_step`: validates the cache against the plan and
+    returns device-ready ``(table, cache, dev, denom)``.
+
+    Fast paths: device-resident inputs are passed through untouched; a plan
+    whose device args were pre-committed by the pipeline uploader
+    (``plan.committed``, see repro.train.pipeline) skips the conversion
+    walk entirely — the upload already happened off the critical path."""
+    table_global = _as_device(table_global)
+    if cache is None:
+        if plan.c_max:
+            raise ValueError(
+                f"plan was built against a cache (c_max={plan.c_max}) "
+                "but no cache table was passed")
+        cache = empty_cache_table(table_global.shape[0],
+                                  table_global.shape[-1], table_global.dtype)
+    else:
+        cache = _as_device(cache)
+        if int(cache.shape[1]) != int(plan.c_max):
+            raise ValueError(
+                f"cache table height {cache.shape[1]} != plan c_max "
+                f"{plan.c_max} (stale cache?)")
+    committed = getattr(plan, "committed", None)
+    if committed is not None:
+        dev, denom = committed["dev"], committed["denom"]
+    else:
+        dev = jax.tree.map(_as_device, plan.device_args())
+        denom = jnp.asarray(float(plan.global_batch), jnp.float32)
+    return table_global, cache, dev, denom
+
+
 def run_iteration(params, table_global, plan, cfg: GNNConfig,
                   mesh: Optional[Mesh] = None, cache=None,
                   fold_returns: Optional[bool] = None):
@@ -358,31 +466,37 @@ def run_iteration(params, table_global, plan, cfg: GNNConfig,
     height must match the plan's). ``fold_returns=None`` applies the
     :data:`FOLD_RETURNS_MAX_TR` auto policy in per-step mode.
     Returns (grads, mean_loss) — optimizer application is the caller's
-    (training loop / train_step fusion decide placement).
+    (training loop / train_step fusion decide placement; see
+    :func:`run_train_step` for the fused variant).
 
     The jitted callable comes from the module-level compile cache: repeated
     calls with plans of the same device shapes reuse one compiled program.
     """
-    table_global = jnp.asarray(table_global)
-    if cache is None:
-        if plan.c_max:
-            raise ValueError(
-                f"plan was built against a cache (c_max={plan.c_max}) "
-                "but no cache table was passed")
-        cache = jnp.zeros((table_global.shape[0], 0, table_global.shape[-1]),
-                          table_global.dtype)
-    else:
-        cache = jnp.asarray(cache)
-        if int(cache.shape[1]) != int(plan.c_max):
-            raise ValueError(
-                f"cache table height {cache.shape[1]} != plan c_max "
-                f"{plan.c_max} (stale cache?)")
-    dev = jax.tree.map(jnp.asarray, plan.device_args())
-    denom = jnp.asarray(float(plan.global_batch), jnp.float32)
+    table_global, cache, dev, denom = prepare_iteration_args(
+        table_global, plan, cache)
     fn = get_compiled_iteration(cfg, plan.pregather, mesh=mesh,
                                 fold_returns=resolve_fold_returns(
                                     plan, fold_returns))
     return fn(params, table_global, cache, dev, denom)
+
+
+def run_train_step(params, opt_state, table_global, plan, cfg: GNNConfig,
+                   optimizer, mesh: Optional[Mesh] = None, cache=None,
+                   fold_returns: Optional[bool] = None):
+    """Execute one planned iteration *and* the optimizer update as a single
+    fused dispatch. Returns ``(params', opt_state', loss)``.
+
+    Donation contract: ``params`` and ``opt_state`` buffers are donated to
+    the program — the inputs are invalid after the call; always continue
+    from the returned trees. The loss stays on device (no host sync); call
+    ``float(loss)`` only when you actually need the value.
+    """
+    table_global, cache, dev, denom = prepare_iteration_args(
+        table_global, plan, cache)
+    fn = get_compiled_train_step(cfg, plan.pregather, optimizer, mesh=mesh,
+                                 fold_returns=resolve_fold_returns(
+                                     plan, fold_returns))
+    return fn(params, opt_state, table_global, cache, dev, denom)
 
 
 def make_sharded_iteration(cfg: GNNConfig, pregather: bool, mesh: Mesh,
@@ -393,12 +507,22 @@ def make_sharded_iteration(cfg: GNNConfig, pregather: bool, mesh: Mesh,
                                   fold_returns=fold_returns)
 
 
-def _build_sharded(cfg: GNNConfig, pregather: bool, fold_returns: bool,
-                   mesh: Mesh, axis: str):
+def _grads_callable(cfg: GNNConfig, pregather: bool, fold_returns: bool,
+                    mesh: Optional[Mesh], axis: str, kind: str):
+    """Unjitted ``(params, table, cache, dev, denom) -> (grads, loss)``
+    callable — the shared core the plain-iteration, fused, and stacked
+    builders all wrap. ``kind`` labels the trace-log records."""
+    if mesh is None:
+        def fn(params, table_g, cache_g, dev, denom):
+            _note_trace(kind, cfg, pregather, table_g, cache_g, dev)
+            return _emulated_iteration(params, table_g, cache_g, dev, denom,
+                                       cfg, pregather, fold_returns)
+        return fn
+
     comm = ShardComm(axis)
 
     def body(params, table, cache, dev, denom):
-        _note_trace("sharded", cfg, pregather, table, cache, dev)
+        _note_trace(kind, cfg, pregather, table, cache, dev)
         # shard_map passes per-shard views with the shard axis kept (size 1)
         table = table[0]
         cache = cache[0]
@@ -407,9 +531,45 @@ def _build_sharded(cfg: GNNConfig, pregather: bool, fold_returns: bool,
                                        pregather, fold_returns, denom, comm)
         return grads, loss
 
-    shmapped = _shard_map(body, mesh, (P(), P(axis), P(axis), P(axis), P()),
-                          (P(), P()))
-    return jax.jit(shmapped)
+    return _shard_map(body, mesh, (P(), P(axis), P(axis), P(axis), P()),
+                      (P(), P()))
+
+
+def _build_sharded(cfg: GNNConfig, pregather: bool, fold_returns: bool,
+                   mesh: Mesh, axis: str):
+    return jax.jit(_grads_callable(cfg, pregather, fold_returns, mesh, axis,
+                                   "sharded"))
+
+
+def _build_fused(cfg: GNNConfig, pregather: bool, fold_returns: bool,
+                 mesh: Optional[Mesh], axis: str, optimizer, stacked: bool):
+    """Fused iteration + optimizer update (optionally scanned over a
+    K-stack of same-shape iterations), with params/opt_state donation."""
+    kind = (("emulated" if mesh is None else "sharded") + "-fused"
+            + ("-stacked" if stacked else ""))
+    grads_fn = _grads_callable(cfg, pregather, fold_returns, mesh, axis, kind)
+
+    if not stacked:
+        def step(params, opt_state, table, cache, dev, denom):
+            grads, loss = grads_fn(params, table, cache, dev, denom)
+            new_params, new_state = optimizer.update(grads, opt_state, params)
+            return new_params, new_state, loss
+
+        return jax.jit(step, donate_argnums=(0, 1))
+
+    def steps(params, opt_state, table, cache, dev_stack, denoms):
+        def body(carry, x):
+            p, s = carry
+            dev, denom = x
+            grads, loss = grads_fn(p, table, cache, dev, denom)
+            p2, s2 = optimizer.update(grads, s, p)
+            return (p2, s2), loss
+
+        (p, s), losses = jax.lax.scan(body, (params, opt_state),
+                                      (dev_stack, denoms))
+        return p, s, losses
+
+    return jax.jit(steps, donate_argnums=(0, 1))
 
 
 def collective_counts(fn, *args) -> dict:
@@ -458,11 +618,8 @@ def _subjaxprs(v):
 
 
 def _build_emulated(cfg: GNNConfig, pregather: bool, fold_returns: bool):
-    def body(params, table_g, cache_g, dev, denom):
-        _note_trace("emulated", cfg, pregather, table_g, cache_g, dev)
-        return _emulated_iteration(params, table_g, cache_g, dev, denom,
-                                   cfg, pregather, fold_returns)
-    return jax.jit(body)
+    return jax.jit(_grads_callable(cfg, pregather, fold_returns, None,
+                                   "data", "emulated"))
 
 
 def _emulated_iteration(params, table_g, cache_g, dev, denom, cfg: GNNConfig,

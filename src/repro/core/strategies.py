@@ -97,6 +97,14 @@ class IterationPlan:
     #                                      iteration requested (hits+misses)
     #                                      — what a trailing LFU observes
 
+    # --- async pipeline (repro.train.pipeline; None = not committed) ---
+    committed: Optional[dict] = None     # {"dev": device-resident
+    #                                      device_args tree, "denom": f32
+    #                                      scalar} uploaded ahead of time by
+    #                                      the plan double-buffer thread;
+    #                                      the engine's prepare fast path
+    #                                      uses it verbatim
+
     def miss_rate(self) -> float:
         """Remote fraction of unique feature rows (paper Fig. 14)."""
         return self.remote_rows_exact / max(self.unique_rows, 1)

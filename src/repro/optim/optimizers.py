@@ -18,6 +18,11 @@ import jax.numpy as jnp
 class Optimizer:
     init: Callable
     update: Callable  # (grads, state, params) -> (new_params, new_state)
+    # Stable value identity for the engine's fused-train-step compile cache
+    # (repro.core.distributed.get_compiled_train_step): two optimizers with
+    # the same hyperparameters share one compiled program. None (e.g. a
+    # schedule callable for lr) falls back to instance identity.
+    key: Optional[tuple] = None
 
 
 def _tree_zeros_like(params, dtype=None):
@@ -51,11 +56,17 @@ class AdamState(NamedTuple):
 def adamw(lr: float | Callable = 1e-3, b1: float = 0.9, b2: float = 0.999,
           eps: float = 1e-8, weight_decay: float = 0.0,
           grad_clip: Optional[float] = None,
-          state_dtype=jnp.float32) -> Optimizer:
+          state_dtype=jnp.float32,
+          key: Optional[tuple] = None) -> Optimizer:
     """AdamW with optional global-norm clipping.
 
     ``state_dtype`` lets large configs keep moments in bf16 (halves optimizer
-    HBM; used by the nemotron-340b dry-run config)."""
+    HBM; used by the nemotron-340b dry-run config). ``key`` declares a value
+    identity for a *callable* lr (schedules can't be hashed by value): pass
+    e.g. ``key=("cos", base_lr, warmup, total)`` so sweeps constructing many
+    schedule-based optimizers share one compiled fused train step — without
+    it each instance falls back to identity keying, which pins its compiled
+    program in the engine cache for the process lifetime."""
     lr_fn = lr if callable(lr) else (lambda _: lr)
 
     def init(params):
@@ -95,7 +106,13 @@ def adamw(lr: float | Callable = 1e-3, b1: float = 0.9, b2: float = 0.999,
         nu = treedef.unflatten([o[2] for o in out])
         return newp, AdamState(step=step, mu=mu, nu=nu)
 
-    return Optimizer(init=init, update=update)
+    if key is None and not callable(lr):
+        key = ("adamw", float(lr), b1, b2, eps, weight_decay, grad_clip,
+               jnp.dtype(state_dtype).name)
+    elif key is not None:
+        key = ("adamw", *key, b1, b2, eps, weight_decay, grad_clip,
+               jnp.dtype(state_dtype).name)
+    return Optimizer(init=init, update=update, key=key)
 
 
 def adam(lr=1e-3, **kw) -> Optimizer:
@@ -124,4 +141,5 @@ def sgd(lr: float | Callable = 1e-2, momentum: float = 0.0) -> Optimizer:
         newp = jax.tree.map(lambda p, g: p - lr_t * g, params, grads)
         return newp, SGDState(step=step, momentum=None)
 
-    return Optimizer(init=init, update=update)
+    key = (("sgd", float(lr), momentum) if not callable(lr) else None)
+    return Optimizer(init=init, update=update, key=key)

@@ -2,17 +2,24 @@
 
 Shape budgets (quantized device shapes, one bucket per merge pattern plus
 the global cache height c_max), a prefetching double-buffered planner
-backed by a multi-core planning thread pool, the §5.3 merging controller
-with a compile-free timing signal, the repro.cache remote-feature cache
-(policy-driven resident hot rows, deterministic epoch prefetch, refresh
-off the critical path), eval, and checkpoint/resume — one Trainer instead
-of per-file hand-rolled epoch loops. See loop.py for the design notes,
-including the planning-pool contract; the vectorized host planner itself
-(SlotMap layout: per-shard id-sorted segments + cached dense translation
-rows) lives in repro.core.pregather.
+backed by a multi-core planning thread pool, the async device pipeline
+(fused donated optimizer step, non-blocking dispatch with epoch-level loss
+sync, ping-pong plan uploads, optional K-stacked scan dispatch — see
+pipeline.py for the timing semantics and the donation contract), the §5.3
+merging controller with a compile-free timing signal, the repro.cache
+remote-feature cache (policy-driven resident hot rows, deterministic
+merge-pattern-aware epoch prefetch, refresh off the critical path), eval,
+and checkpoint/resume — one Trainer instead of per-file hand-rolled epoch
+loops. See loop.py for the design notes, including the planning-pool
+contract; the vectorized host planner itself (SlotMap layout: per-shard
+id-sorted segments + cached dense translation rows) lives in
+repro.core.pregather.
 """
 from repro.train.budget import ShapeBudget, next_bucket
 from repro.train.loop import EpochStats, Trainer, merging_walk
+from repro.train.pipeline import (EpochRunResult, PlanUploader,
+                                  run_pipelined_epoch)
 
 __all__ = ["ShapeBudget", "next_bucket", "EpochStats", "Trainer",
-           "merging_walk"]
+           "merging_walk", "EpochRunResult", "PlanUploader",
+           "run_pipelined_epoch"]

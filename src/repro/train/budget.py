@@ -60,6 +60,17 @@ class ShapeBudget:
     min_batch_pad: int = 8
     min_r_max: int = 8
     max_rebuckets: int = 8
+    # Probe headroom for r_max: the probe only sees one iteration's exact
+    # per-peer fetch counts, and those vary batch-to-batch (sampling is
+    # data-dependent), so bucketing the bare probe routinely overflows a
+    # few iterations later — one PlanOverflow re-bucket, one full XLA
+    # recompile mid-training (measured ~100× an iteration). Bucketing
+    # probe × headroom instead absorbs ordinary variance; padded request
+    # slots fetch row 0 and are never read, so the cost is exchange-buffer
+    # bytes, not numerics. batch_pad gets no headroom: padded roots carry
+    # real (weight-0) tree compute, and overflow there is assignment-skew
+    # driven, which the per-pattern buckets already isolate.
+    r_max_headroom: float = 1.5
     # --- counters (observability; the compile-once tests read these) ---
     rebuckets: int = 0
     plans_built: int = 0
@@ -73,6 +84,15 @@ class ShapeBudget:
 
     def signature(self) -> tuple[int, int]:
         return (self.batch_pad, self.r_max)
+
+    def bucket_shapes(self, num_steps) -> "tuple[int, int, int] | None":
+        """(batch_pad, r_max, c_max) of the bucket serving this merge
+        pattern, or None if the pattern hasn't been planned yet. The
+        pipeline uploader's ping-pong stability check reads this: every
+        committed plan of a pattern must carry exactly these shapes, or
+        an upload would imply a retrace."""
+        b = self.buckets.get(int(num_steps))
+        return None if b is None else (int(b[0]), int(b[1]), int(self.c_max))
 
     def grow(self, field: str, needed: int) -> None:
         """Explicit overflow re-bucketing: jump to the next power-of-two
@@ -132,7 +152,8 @@ class ShapeBudget:
                 self.probes += 1
                 bucket = [next_bucket(probe.batch_pad,
                                       max(self.min_batch_pad, seed_bp)),
-                          next_bucket(probe.r_max,
+                          next_bucket(int(probe.r_max
+                                          * max(self.r_max_headroom, 1.0)),
                                       max(self.min_r_max, seed_rm))]
             self.buckets[key] = bucket
         self._active_key = key

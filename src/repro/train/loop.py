@@ -29,6 +29,20 @@ to hand-roll per file:
   power-of-two row bucket, so content refreshes never change device shapes
   — the compile-once contract holds across refreshes.
 
+* **Async device pipeline** (repro.train.pipeline; default ON) — the
+  optimizer update is fused into the compiled iteration (one donated
+  dispatch per step instead of a grads round-trip plus an eager per-leaf
+  update), losses stay on device until the epoch boundary, and the plan
+  prefetch thread additionally commits plan i+1's host→device upload into
+  ping-pong buffers while plan i executes. Timing semantics change with
+  it: per-iteration walls are *dispatch* times; steady-state is measured
+  on a synced window (see pipeline.py). ``pipeline=False`` restores the
+  per-iteration blocking loop; ``fused=False`` additionally restores the
+  pre-pipeline eager optimizer path (the A/B benchmarks compare them).
+  Donation contract: the fused step consumes the params/opt_state buffers
+  it is given — the Trainer copies caller-supplied initial params once and
+  always continues from the returned trees.
+
 * **Eval + checkpoint/resume** — iteration-boundary checkpoints of
   (params, optimizer state, merge pattern) and tree-block evaluation using
   features gathered back out of the sharded table.
@@ -89,6 +103,11 @@ class EpochStats:
     cache_bytes_saved: int = 0  # hit rows × row bytes (gross fabric savings)
     cache_refresh_s: float = 0.0  # blocking refresh time at the epoch
     #                               boundary (prefetch overlap already taken)
+    # --- async pipeline (repro.train.pipeline; see its timing notes) ---
+    pipelined: bool = False     # this epoch ran the non-blocking fused loop
+    dispatch_s: float = 0.0     # host time inside dispatch calls (pipelined
+    #                             mode only; the device keeps running after
+    #                             each dispatch returns)
 
 
 class Trainer:
@@ -115,7 +134,12 @@ class Trainer:
                  ckpt_keep: int = 3,
                  cache_policy: Optional[str] = None,
                  cache_budget_bytes: int = 0,
-                 cache_prefetch: bool = True):
+                 cache_prefetch: bool = True,
+                 pipeline: bool = True,
+                 pipeline_stack: int = 1,
+                 fused: Optional[bool] = None,
+                 loss_sync_iters: int = 16,
+                 fold_returns: Optional[bool] = None):
         self.graph = graph
         self.labels = np.asarray(labels)
         self.part = np.asarray(part)
@@ -127,9 +151,28 @@ class Trainer:
         self.table = jnp.asarray(table)
         self.cfg = cfg
         self.optimizer = optimizer or adamw(1e-3)
-        self.params = (params if params is not None
-                       else init_gnn(jax.random.PRNGKey(init_seed), cfg))
+        # async pipeline / fused dispatch (repro.train.pipeline)
+        self.pipeline = bool(pipeline)
+        self.pipeline_stack = max(1, int(pipeline_stack))
+        # fused defaults ON regardless of pipeline: pipeline=False alone is
+        # the blocking-but-fused loop (bit-identical to pipelined); the
+        # pre-pipeline eager-optimizer path needs an explicit fused=False
+        self.fused = True if fused is None else bool(fused)
+        if self.pipeline and not self.fused:
+            raise ValueError("pipeline=True requires the fused train step "
+                             "(fused=False only with pipeline=False)")
+        self.loss_sync_iters = int(loss_sync_iters)
+        self.fold_returns = fold_returns
+        if params is None:
+            params = init_gnn(jax.random.PRNGKey(init_seed), cfg)
+        elif self.fused:
+            # the fused step donates params buffers; copy once so the
+            # caller's tree stays valid (donation contract, pipeline.py)
+            params = jax.tree.map(jnp.array, params)
+        self.params = params
         self.opt_state = self.optimizer.init(self.params)
+        self._uploader = None          # PlanUploader, created in fit()
+        self._empty_cache = None       # shared (N, 0, d) cache-off table
         self.strategy: Strategy = strategy
         self.pregather = pregather
         self.merging = (strategy == "hopgnn") if merging is None else merging
@@ -201,7 +244,8 @@ class Trainer:
                     roots_for=self._prefetch_roots_for,
                     sample_seed_for=lambda e, i:
                         self.sample_seed_base + e * 10_000 + i,
-                    strategy=self.strategy)
+                    strategy=self.strategy,
+                    fold_steps=self._prefetch_fold)
                 self._prefetch_batch = 0   # bound per fit() call
 
     @classmethod
@@ -275,6 +319,11 @@ class Trainer:
             with self._cache_lock:
                 for s in range(self.num_shards):
                     self._cache_policy.observe(s, plan.remote_ids[s])
+        if self._uploader is not None:
+            # async pipeline: commit the host→device upload here, on the
+            # prefetch thread, so plan i+1's transfer overlaps plan i's
+            # device execution and the dispatch path never converts leaves
+            self._uploader.commit(plan)
         with self._plan_time_lock:
             self._plan_time_acc += time.perf_counter() - t0
             self._plans_built_acc += 1
@@ -312,6 +361,22 @@ class Trainer:
         """Deterministic root replay for the epoch prefetcher (same draw as
         build_plan will make — root_fn / (root_seed, epoch, it) seeded)."""
         return self._roots_for(epoch, it, self._prefetch_batch)
+
+    def _prefetch_fold(self, amat):
+        """Merge-pattern application for the epoch prefetcher: fold the
+        predicted rotation exactly like build_plan will, so an active §5.3
+        merge no longer shifts requests away from the predicted hot sets
+        (the ROADMAP "cache vs merging prediction gap"). Exact for the
+        paper's deterministic "min" selector; the RD baseline's random
+        folds consume controller RNG state and cannot be replayed ahead of
+        time, so those predictions stay unfolded (correctness unaffected —
+        mispredicted rows simply miss)."""
+        ctl = self.controller
+        if (ctl is None or self.strategy != "hopgnn" or not self.merging
+                or self.selector != "min"):
+            return amat
+        from repro.core.merging import fold_assignment
+        return fold_assignment(amat, ctl.pattern_steps, self.selector)
 
     def _cache_select_install(self, hot=None) -> dict:
         """Run the admission policy (optionally against predicted hot sets),
@@ -378,8 +443,10 @@ class Trainer:
     # Device stepping
     # ------------------------------------------------------------------
 
-    def train_step(self, plan: IterationPlan):
-        cache_tab = None
+    def _cache_table_for(self, plan: IterationPlan):
+        """Device cache table for this plan, with the staleness check.
+        Cache-off plans share one zero-width table (no per-iteration
+        allocation)."""
         if plan.c_max:
             store = self.cache_store
             if store is None or plan.cache_version != store.version:
@@ -387,18 +454,116 @@ class Trainer:
                     f"stale cache plan: plan version {plan.cache_version} "
                     f"vs store "
                     f"{store.version if store is not None else 'absent'}")
-            cache_tab = store.device_table
+            return store.device_table
+        if self._empty_cache is None:
+            self._empty_cache = engine.empty_cache_table(
+                self.num_shards, int(self._table_np.shape[-1]),
+                self._table_np.dtype)
+        return self._empty_cache
+
+    def train_step(self, plan: IterationPlan):
+        """Pre-pipeline step: grads round-trip + eager optimizer update.
+        Kept as the ``fused=False`` path (and the benchmarks' A/B
+        baseline); the pipelined loop dispatches :meth:`_dispatch_fused`
+        instead."""
+        cache_tab = self._cache_table_for(plan)
         grads, loss = engine.run_iteration(self.params, self.table, plan,
                                            self.cfg, mesh=self.mesh,
-                                           cache=cache_tab)
+                                           cache=cache_tab,
+                                           fold_returns=self.fold_returns)
         self.params, self.opt_state = self.optimizer.update(
             grads, self.opt_state, self.params)
         self.global_step += 1
         return loss
 
+    def _dispatch_fused(self, plan: IterationPlan):
+        """One fused, donated, non-blocking dispatch: iteration + optimizer
+        update in a single compiled program. Returns the *device* loss —
+        no host sync happens here."""
+        cache_tab = self._cache_table_for(plan)
+        fn = engine.get_compiled_train_step(
+            self.cfg, plan.pregather, self.optimizer, mesh=self.mesh,
+            fold_returns=engine.resolve_fold_returns(plan,
+                                                     self.fold_returns))
+        table, cache_tab, dev, denom = engine.prepare_iteration_args(
+            self.table, plan, cache_tab)
+        self.params, self.opt_state, loss = fn(
+            self.params, self.opt_state, table, cache_tab, dev, denom)
+        self.global_step += 1
+        return loss
+
+    def _dispatch_stacked(self, plans: Sequence[IterationPlan]):
+        """One scanned dispatch covering ``len(plans)`` same-bucket
+        iterations (pipeline_stack > 1). Returns the (K,) device losses."""
+        from repro.train.pipeline import stack_committed
+        p0 = plans[0]
+        for p in plans[1:]:
+            if (p.pregather != p0.pregather
+                    or p.cache_version != p0.cache_version
+                    or p.num_steps != p0.num_steps):
+                raise ValueError("stacked plans must share mode, cache "
+                                 "version, and merge pattern")
+            if (p.batch_pad, p.r_max, p.c_max) != (p0.batch_pad, p0.r_max,
+                                                   p0.c_max):
+                # a mid-epoch budget re-bucket split the group's shapes
+                # (rare: only when sampling variance beats the r_max
+                # headroom); fall back to per-plan dispatch — one extra
+                # retrace, exactly like the unstacked loop, instead of a
+                # jnp.stack shape crash
+                return [self._dispatch_fused(q) for q in plans]
+        cache_tab = self._cache_table_for(p0)
+        fn = engine.get_compiled_train_step(
+            self.cfg, p0.pregather, self.optimizer, mesh=self.mesh,
+            fold_returns=engine.resolve_fold_returns(p0, self.fold_returns),
+            stacked=True)
+        dev_stack, denoms = stack_committed(plans)
+        self.params, self.opt_state, losses = fn(
+            self.params, self.opt_state, engine._as_device(self.table),
+            cache_tab, dev_stack, denoms)
+        self.global_step += len(plans)
+        return losses
+
     # ------------------------------------------------------------------
     # Epoch loop
     # ------------------------------------------------------------------
+
+    def _epoch_sync(self, epoch: int, iters: int, batch_per_model: int,
+                    submit):
+        """Per-iteration blocking loop (``pipeline=False``): double-buffered
+        plans, one ``float(loss)`` device sync per step. With ``fused=True``
+        it dispatches the fused program (bit-identical to the pipelined
+        loop, just synchronous); with ``fused=False`` it is the
+        pre-pipeline grads + eager-update path, kept as the benchmarks'
+        A/B baseline."""
+        from repro.train.pipeline import EpochRunResult
+        t_epoch = time.perf_counter()
+        fut = submit(self.build_plan, epoch, 0, batch_per_model)
+        iter_times: list[float] = []
+        traced: list[bool] = []
+        losses: list[float] = []
+        remote, num_steps, cache_hits = 0, 0, 0
+        for it in range(iters):
+            plan = fut.result()
+            if it + 1 < iters:
+                # double-buffer: plan i+1 builds while i executes
+                fut = submit(self.build_plan, epoch, it + 1,
+                             batch_per_model)
+            tc0 = engine.trace_count()
+            t0 = time.perf_counter()
+            loss = (self._dispatch_fused(plan) if self.fused
+                    else self.train_step(plan))
+            losses.append(float(loss))   # blocks until device done
+            iter_times.append(time.perf_counter() - t0)
+            traced.append(engine.trace_count() > tc0)
+            remote += plan.remote_rows_exact
+            cache_hits += plan.cache_hit_rows
+            num_steps = plan.num_steps
+        steady = [t for t, tr in zip(iter_times, traced) if not tr]
+        return EpochRunResult(
+            losses=losses, wall_s=time.perf_counter() - t_epoch,
+            steady_iter_s=float(np.mean(steady)) if steady else None,
+            dispatch_s=0.0, traces=int(sum(traced)), remote_rows=remote,
+            cache_hit_rows=cache_hits, num_steps=num_steps)
 
     def fit(self, epochs: int, iters_per_epoch: int,
             batch_per_model: int = 16, eval_every: int = 0,
@@ -407,21 +572,27 @@ class Trainer:
             ) -> list[EpochStats]:
         """Run the epoch loop; returns one :class:`EpochStats` per epoch.
 
-        ``steady_time_s`` extrapolates the epoch's device time from the
-        iterations on which *no* jit trace occurred (trace log delta); that
-        compile-free figure — not raw wall time — feeds the merging
-        controller, so the §5.3 examination measures kernel-switch/sync
-        overhead instead of XLA compilation. If *every* iteration of an
-        epoch traced (e.g. iters_per_epoch=1 right after a pattern change)
-        no compile-free sample exists: the epoch is marked
-        ``compile_free=False`` and is NOT recorded with the controller —
-        feeding it compile-laden time would re-introduce the inverted
-        signal this module exists to fix.
+        ``steady_time_s`` is the compile-free steady-state estimate that
+        feeds the merging controller, so the §5.3 examination measures
+        kernel-switch/sync overhead instead of XLA compilation. In the
+        synchronous loop it extrapolates from the iterations on which *no*
+        jit trace occurred (per-iteration walls, trace-log delta); in the
+        pipelined loop per-iteration walls are mere dispatch times, so it
+        comes from the synced window instead — the stretch of iterations
+        after the last (re)trace, closed by a ``block_until_ready`` (see
+        repro.train.pipeline). If no compile-free sample exists (e.g.
+        iters_per_epoch=1 right after a pattern change) the epoch is
+        marked ``compile_free=False`` and is NOT recorded with the
+        controller — feeding it compile-laden time would re-introduce the
+        inverted signal this module exists to fix.
         """
         start_epoch = self._maybe_resume() if resume else 0
         stats: list[EpochStats] = []
         pool = ThreadPoolExecutor(max_workers=1) if self._prefetch else None
         submit = pool.submit if pool is not None else self._run_inline
+        if self.pipeline and self._uploader is None:
+            from repro.train.pipeline import PlanUploader
+            self._uploader = PlanUploader(budget=self.budget)
         # the cache refresh computation gets its own thread: it must not
         # block the plan double-buffer (and vice versa)
         cache_exec = (ThreadPoolExecutor(max_workers=1,
@@ -433,33 +604,20 @@ class Trainer:
                 refresh_s = self._cache_epoch_begin(
                     epoch, start_epoch, epochs, iters_per_epoch,
                     batch_per_model, cache_exec)
-                t_epoch = time.perf_counter()
-                fut = submit(self.build_plan, epoch, 0, batch_per_model)
-                iter_times: list[float] = []
-                traced: list[bool] = []
-                loss_sum, remote, num_steps = 0.0, 0, 0
-                cache_hits = 0
-                for it in range(iters_per_epoch):
-                    plan = fut.result()
-                    if it + 1 < iters_per_epoch:
-                        # double-buffer: plan i+1 builds while i executes
-                        fut = submit(self.build_plan, epoch, it + 1,
-                                     batch_per_model)
-                    tc0 = engine.trace_count()
-                    t0 = time.perf_counter()
-                    loss = self.train_step(plan)
-                    loss_sum += float(loss)      # blocks until device done
-                    iter_times.append(time.perf_counter() - t0)
-                    traced.append(engine.trace_count() > tc0)
-                    remote += plan.remote_rows_exact
-                    cache_hits += plan.cache_hit_rows
-                    num_steps = plan.num_steps
-                dt = time.perf_counter() - t_epoch
-                steady = [t for t, tr in zip(iter_times, traced) if not tr]
-                steady_iter = (float(np.mean(steady)) if steady
-                               else float(np.mean(iter_times)))
+                if self.pipeline:
+                    from repro.train.pipeline import run_pipelined_epoch
+                    res = run_pipelined_epoch(
+                        self, epoch, iters_per_epoch, batch_per_model,
+                        submit, stack=self.pipeline_stack,
+                        loss_sync_iters=self.loss_sync_iters)
+                else:
+                    res = self._epoch_sync(epoch, iters_per_epoch,
+                                           batch_per_model, submit)
+                compile_free = res.steady_iter_s is not None
+                steady_iter = (res.steady_iter_s if compile_free
+                               else res.wall_s / iters_per_epoch)
                 steady_epoch = steady_iter * iters_per_epoch
-                if self.controller is not None and steady:
+                if self.controller is not None and compile_free:
                     self.controller.record_epoch_time(steady_epoch)
                 acc = (self.evaluate(n_eval=n_eval)
                        if eval_every and (epoch + 1) % eval_every == 0
@@ -468,18 +626,24 @@ class Trainer:
                 row_bytes = (int(self._table_np.shape[-1])
                              * self._table_np.dtype.itemsize)
                 st = EpochStats(epoch=epoch,
-                                loss=loss_sum / iters_per_epoch,
-                                time_s=dt, steady_time_s=steady_epoch,
-                                traces=int(sum(traced)),
-                                num_steps=num_steps, remote_rows=remote,
-                                acc=acc, compile_free=bool(steady),
+                                loss=sum(res.losses) / iters_per_epoch,
+                                time_s=res.wall_s,
+                                steady_time_s=steady_epoch,
+                                traces=res.traces,
+                                num_steps=res.num_steps,
+                                remote_rows=res.remote_rows,
+                                acc=acc, compile_free=compile_free,
                                 plan_time_s=plan_time,
                                 plans_built=plans_built,
-                                cache_hit_rows=cache_hits,
-                                cache_hit_rate=cache_hits
-                                / max(cache_hits + remote, 1),
-                                cache_bytes_saved=cache_hits * row_bytes,
-                                cache_refresh_s=refresh_s)
+                                cache_hit_rows=res.cache_hit_rows,
+                                cache_hit_rate=res.cache_hit_rows
+                                / max(res.cache_hit_rows
+                                      + res.remote_rows, 1),
+                                cache_bytes_saved=res.cache_hit_rows
+                                * row_bytes,
+                                cache_refresh_s=refresh_s,
+                                pipelined=self.pipeline,
+                                dispatch_s=res.dispatch_s)
                 stats.append(st)
                 if log is not None:
                     log(f"epoch {epoch}: loss {st.loss:.4f} "

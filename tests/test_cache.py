@@ -436,3 +436,67 @@ def test_trainer_zero_budget_disables_cache(partitioned):
     assert not tr.cache_enabled
     stats = tr.fit(epochs=1, iters_per_epoch=2, batch_per_model=8)
     assert stats[0].cache_hit_rows == 0
+
+
+# ---------------------------------------------------------------------------
+# Merge-pattern-aware prediction (the ROADMAP "cache vs merging gap")
+# ---------------------------------------------------------------------------
+
+def test_prefetcher_fold_steps_predicts_merged_requests(partitioned):
+    """Under a §5.3 merge the requesting shard moves for the merged roots:
+    the unfolded replay must mispredict some shard's request set, and the
+    fold_steps hook (folding exactly like build_plan) must restore exact
+    prediction."""
+    from repro.core.merging import MergingController
+    from repro.core.micrograph import hopgnn_assignment
+    d = partitioned
+    tr = _mk_trainer(d, cache_policy="lfu",
+                     cache_budget_bytes=64 * d["ds"].feature_dim * 4,
+                     merging=True, root_seed=11)
+    tr._prefetch_batch = 8
+    steps = d["parts"] - 1
+    tr.controller = MergingController(
+        base=hopgnn_assignment(tr._roots_for(0, 0, 8), d["part"]))
+    tr.controller.restore(num_steps=steps, frozen=True)
+
+    pf = tr._cache_prefetcher                 # fold_steps wired by Trainer
+    unfolded = EpochPrefetcher(
+        graph=d["ds"].graph, part=d["part"], owner=d["owner"],
+        num_shards=d["parts"], num_layers=2, fanout=4,
+        roots_for=tr._prefetch_roots_for,
+        sample_seed_for=lambda e, i: tr.sample_seed_base + e * 10_000 + i,
+        strategy="hopgnn")
+
+    mismatch = False
+    for it in range(2):
+        pred = pf.iteration_requests(1, it)
+        pred_raw = unfolded.iteration_requests(1, it)
+        plan = tr.build_plan(1, it, 8)        # folds via controller pattern
+        assert plan.num_steps == steps
+        for s in range(d["parts"]):
+            np.testing.assert_array_equal(np.sort(pred[s]),
+                                          plan.remote_ids[s])
+            if not np.array_equal(np.sort(pred_raw[s]), plan.remote_ids[s]):
+                mismatch = True
+    assert mismatch        # the gap is real: unfolded prediction is wrong
+
+
+def test_merged_frozen_pattern_recovers_full_hit_rate(partitioned):
+    """Regression for the prediction gap: with an active (frozen) merge
+    and a covering LFU budget, prefetch-driven steady epochs must be
+    all-hit — exactly like the unmerged benchmark configuration."""
+    d = partitioned
+    engine.clear_compile_cache()
+    from repro.core.merging import MergingController
+    from repro.core.micrograph import hopgnn_assignment
+    tr = _mk_trainer(d, cache_policy="lfu", merging=True, root_seed=11,
+                     cache_budget_bytes=4096 * d["ds"].feature_dim * 4)
+    tr.controller = MergingController(
+        base=hopgnn_assignment(tr._roots_for(0, 0, 8), d["part"]))
+    tr.controller.restore(num_steps=d["parts"] - 1, frozen=True)
+    stats = tr.fit(epochs=3, iters_per_epoch=3, batch_per_model=8)
+    assert all(st.num_steps == d["parts"] - 1 for st in stats)
+    # epoch 0 runs cold (no forecast yet); steady epochs are all-hit
+    assert stats[1].cache_hit_rate == 1.0 and stats[2].cache_hit_rate == 1.0
+    assert stats[1].remote_rows == 0 and stats[2].remote_rows == 0
+    assert stats[1].traces == 0 and stats[2].traces == 0

@@ -1,0 +1,297 @@
+"""Async device pipeline (repro.train.pipeline + fused engine step):
+
+* fused iteration+update vs the grads round-trip + eager optimizer path,
+* pipelined (non-blocking, committed uploads) vs synchronous fused loop —
+  bit-identical params and losses across pregather / per-step /
+  per-step+folded / cache-on configurations,
+* K-stacked scan dispatch parity (incl. the remainder path),
+* zero retraces after epoch 0 under ping-pong plan buffers,
+* device-resident argument fast paths (committed plans, table passthrough,
+  shared empty-cache table), and the donation contract.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import distributed as engine
+from repro.core import run_iteration
+from repro.models.gnn import GNNConfig, init_gnn
+from repro.optim import adam
+from repro.train import PlanUploader, ShapeBudget, Trainer
+
+
+def _cfg(d, model="sage"):
+    return GNNConfig(model=model, num_layers=2, hidden_dim=16,
+                     feature_dim=d["ds"].feature_dim,
+                     num_classes=d["ds"].num_classes, fanout=4)
+
+
+def _trainer(d, cfg, **kw):
+    kw.setdefault("optimizer", adam(5e-3))
+    kw.setdefault("merging", False)
+    kw.setdefault("train_vertices", d["ds"].train_vertices())
+    return Trainer(graph=d["ds"].graph, labels=d["ds"].labels,
+                   part=d["part"], owner=d["owner"],
+                   local_idx=d["local_idx"], table=d["table"], cfg=cfg, **kw)
+
+
+def _plan(d, roots, **kw):
+    budget = ShapeBudget()
+    return budget.plan(
+        graph=d["ds"].graph, labels=d["ds"].labels, part=d["part"],
+        owner=d["owner"], local_idx=d["local_idx"],
+        local_rows=d["table"].shape[1], roots_per_model=roots,
+        num_layers=2, fanout=4, strategy="hopgnn", sample_seed=7, **kw)
+
+
+def _tree_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ---------------------------------------------------------------------------
+# Fused engine step
+# ---------------------------------------------------------------------------
+
+def test_fused_step_matches_manual_update(partitioned):
+    """run_train_step (one fused dispatch) must reproduce run_iteration +
+    optimizer.update: bit-identical loss, params equal to XLA
+    fusion-boundary rounding (≤1 ulp — the update chain compiles as one
+    program instead of per-op)."""
+    d = partitioned
+    cfg = _cfg(d)
+    opt = adam(5e-3)
+    rng = np.random.default_rng(1)
+    tv = d["ds"].train_vertices()
+    roots = [rng.choice(tv, 9, replace=False) for _ in range(d["parts"])]
+    plan = _plan(d, roots)
+
+    params = init_gnn(jax.random.PRNGKey(0), cfg)
+    state = opt.init(params)
+    grads, loss_ref = run_iteration(params, d["table"], plan, cfg)
+    p_ref, s_ref = opt.update(grads, state, params)
+
+    params2 = init_gnn(jax.random.PRNGKey(0), cfg)
+    state2 = opt.init(params2)
+    p_f, s_f, loss_f = engine.run_train_step(params2, state2, d["table"],
+                                             plan, cfg, opt)
+    assert float(loss_ref) == float(loss_f)
+    for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p_f)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=2e-8)
+    for a, b in zip(jax.tree.leaves(s_ref), jax.tree.leaves(s_f)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=2e-8)
+
+
+def test_fused_step_donates_buffers(partitioned):
+    """The donation contract: the input params/opt_state buffers are
+    consumed by the fused call (callers must thread the outputs)."""
+    d = partitioned
+    cfg = _cfg(d)
+    opt = adam(5e-3)
+    rng = np.random.default_rng(2)
+    tv = d["ds"].train_vertices()
+    roots = [rng.choice(tv, 9, replace=False) for _ in range(d["parts"])]
+    plan = _plan(d, roots)
+    params = init_gnn(jax.random.PRNGKey(0), cfg)
+    state = opt.init(params)
+    p2, s2, _ = engine.run_train_step(params, state, d["table"], plan,
+                                      cfg, opt)
+    assert jax.tree.leaves(params)[0].is_deleted()
+    assert not jax.tree.leaves(p2)[0].is_deleted()
+
+
+def test_optimizer_value_key_shares_compiled_step(partitioned):
+    """Two optimizer instances with equal hyperparameters must resolve to
+    the same compiled fused program (value cache key, no per-instance
+    recompilation)."""
+    d = partitioned
+    cfg = _cfg(d)
+    a = engine.get_compiled_train_step(cfg, True, adam(5e-3))
+    b = engine.get_compiled_train_step(cfg, True, adam(5e-3))
+    assert a is b
+    c = engine.get_compiled_train_step(cfg, True, adam(7e-3))
+    assert c is not a
+
+
+# ---------------------------------------------------------------------------
+# Pipelined loop parity (the tentpole acceptance tests)
+# ---------------------------------------------------------------------------
+
+_PARITY_CONFIGS = [
+    ("pregather", dict()),
+    ("per-step", dict(pregather=False, fold_returns=False)),
+    ("per-step-folded", dict(pregather=False, fold_returns=True)),
+    ("cache-on", dict(cache_policy="degree", cache_budget_bytes=1 << 16)),
+]
+
+
+@pytest.mark.parametrize("name,kw", _PARITY_CONFIGS,
+                         ids=[n for n, _ in _PARITY_CONFIGS])
+def test_pipelined_matches_sync_loop_bitwise(partitioned, name, kw):
+    """The async pipeline changes WHEN work happens, never WHAT is
+    computed: params and per-epoch losses must be bit-identical to the
+    synchronous (per-iteration blocking) fused loop."""
+    d = partitioned
+    cfg = _cfg(d)
+    tr_p = _trainer(d, cfg, pipeline=True, **kw)
+    st_p = tr_p.fit(epochs=2, iters_per_epoch=3, batch_per_model=8)
+    tr_s = _trainer(d, cfg, pipeline=False, fused=True, **kw)
+    st_s = tr_s.fit(epochs=2, iters_per_epoch=3, batch_per_model=8)
+    assert _tree_equal(tr_p.params, tr_s.params)
+    assert _tree_equal(tr_p.opt_state, tr_s.opt_state)
+    assert [s.loss for s in st_p] == [s.loss for s in st_s]
+    assert all(s.pipelined for s in st_p)
+    assert not any(s.pipelined for s in st_s)
+
+
+def test_pipelined_matches_legacy_loop_close(partitioned):
+    """Against the pre-pipeline loop (grads round-trip + eager per-op
+    update) the fused program may differ by XLA fusion-boundary rounding
+    only: losses and params agree to float tolerance after two epochs."""
+    d = partitioned
+    cfg = _cfg(d)
+    tr_p = _trainer(d, cfg, pipeline=True)
+    st_p = tr_p.fit(epochs=2, iters_per_epoch=3, batch_per_model=8)
+    tr_l = _trainer(d, cfg, pipeline=False, fused=False)   # legacy path
+    st_l = tr_l.fit(epochs=2, iters_per_epoch=3, batch_per_model=8)
+    for a, b in zip(jax.tree.leaves(tr_p.params), jax.tree.leaves(tr_l.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose([s.loss for s in st_p],
+                               [s.loss for s in st_l], rtol=1e-5)
+
+
+def test_zero_retraces_after_epoch0_with_pingpong_uploads(partitioned):
+    """Acceptance: the pipelined loop double-buffers plan uploads into
+    ping-pong slots without ever changing device shapes — epochs ≥1 run
+    with zero jit traces and every upload signature is stable."""
+    engine.clear_compile_cache()
+    d = partitioned
+    tr = _trainer(d, _cfg(d), pipeline=True)
+    stats = tr.fit(epochs=3, iters_per_epoch=3, batch_per_model=8)
+    assert stats[0].traces >= 1
+    assert stats[1].traces == 0 and stats[2].traces == 0
+    assert all(s.compile_free for s in stats)
+    assert tr._uploader.uploads == 9              # one commit per plan
+    assert tr._uploader.shape_changes == 0
+    # every executed plan took the committed-upload fast path
+    assert tr.budget.rebuckets == 0
+
+
+def test_stacked_dispatch_parity_and_remainder(partitioned):
+    """pipeline_stack=K scans the fused step over K stacked plans: results
+    must be bit-identical to unstacked, including the remainder dispatch
+    when iters % K != 0 (5 iters, K=2 → dispatches of 2, 2, 1)."""
+    d = partitioned
+    cfg = _cfg(d)
+    tr1 = _trainer(d, cfg, pipeline=True)
+    st1 = tr1.fit(epochs=2, iters_per_epoch=5, batch_per_model=8)
+    trk = _trainer(d, cfg, pipeline=True, pipeline_stack=2)
+    stk = trk.fit(epochs=2, iters_per_epoch=5, batch_per_model=8)
+    assert _tree_equal(tr1.params, trk.params)
+    assert [s.loss for s in st1] == [s.loss for s in stk]
+    assert trk.global_step == tr1.global_step == 10
+
+
+def test_loss_sync_every_k_iters(partitioned):
+    """The optional queue-depth throttle (sync losses every K dispatches)
+    must not change results."""
+    d = partitioned
+    cfg = _cfg(d)
+    tr_a = _trainer(d, cfg, pipeline=True)
+    st_a = tr_a.fit(epochs=1, iters_per_epoch=4, batch_per_model=8)
+    tr_b = _trainer(d, cfg, pipeline=True, loss_sync_iters=2)
+    st_b = tr_b.fit(epochs=1, iters_per_epoch=4, batch_per_model=8)
+    assert _tree_equal(tr_a.params, tr_b.params)
+    assert st_a[0].loss == st_b[0].loss
+
+
+# ---------------------------------------------------------------------------
+# Device-resident argument fast paths
+# ---------------------------------------------------------------------------
+
+def test_prepare_args_fast_paths(partitioned):
+    """Device-resident tables pass through untouched, committed plans skip
+    the conversion walk, and cache-off iterations share one zero-width
+    cache table."""
+    d = partitioned
+    rng = np.random.default_rng(3)
+    tv = d["ds"].train_vertices()
+    roots = [rng.choice(tv, 9, replace=False) for _ in range(d["parts"])]
+    plan = _plan(d, roots)
+    table = jnp.asarray(d["table"])
+
+    t1, c1, dev1, _ = engine.prepare_iteration_args(table, plan)
+    assert t1 is table                            # no re-wrap
+    t2, c2, _, _ = engine.prepare_iteration_args(table, plan)
+    assert c2 is c1                               # shared empty cache
+
+    up = PlanUploader()
+    up.commit(plan)
+    assert plan.committed is not None
+    _, _, dev3, denom3 = engine.prepare_iteration_args(table, plan)
+    assert dev3 is plan.committed["dev"]          # committed fast path
+    assert denom3 is plan.committed["denom"]
+    # committed args execute identically
+    params = init_gnn(jax.random.PRNGKey(0), _cfg(d))
+    _, loss_a = run_iteration(params, table, plan, _cfg(d))
+    plan.committed = None
+    _, loss_b = run_iteration(params, table, plan, _cfg(d))
+    assert float(loss_a) == float(loss_b)
+
+
+def test_uploader_pingpong_and_budget_guard(partitioned):
+    """Slots alternate, signatures stay stable for same-bucket plans, and
+    a plan whose shapes drifted from its budget bucket is refused."""
+    d = partitioned
+    rng = np.random.default_rng(4)
+    tv = d["ds"].train_vertices()
+    budget = ShapeBudget()
+    plans = []
+    for i in range(4):
+        roots = [rng.choice(tv, 7 + i % 2, replace=False)
+                 for _ in range(d["parts"])]
+        plans.append(budget.plan(
+            graph=d["ds"].graph, labels=d["ds"].labels, part=d["part"],
+            owner=d["owner"], local_idx=d["local_idx"],
+            local_rows=d["table"].shape[1], roots_per_model=roots,
+            num_layers=2, fanout=4, strategy="hopgnn", sample_seed=i))
+    up = PlanUploader(budget=budget)
+    for p in plans:
+        up.commit(p)
+    assert up.uploads == 4 and up.shape_changes == 0
+
+    bad = plans[0]
+    bad.committed = None
+    bad.batch_pad *= 2                # claims shapes outside its bucket
+    with pytest.raises(AssertionError, match="drifted"):
+        up.commit(bad)
+
+
+def test_stacked_dispatch_falls_back_on_shape_split(partitioned):
+    """A mid-epoch re-bucket can hand the stacker plans with different
+    r_max buckets: it must fall back to per-plan dispatch (one extra
+    retrace, like the unstacked loop), not crash in jnp.stack."""
+    d = partitioned
+    cfg = _cfg(d)
+    tr = _trainer(d, cfg, pipeline=True, pipeline_stack=2)
+    from repro.core import plan_iteration
+    rng = np.random.default_rng(5)
+    tv = d["ds"].train_vertices()
+    roots = [rng.choice(tv, 9, replace=False) for _ in range(d["parts"])]
+    a = _plan(d, roots)
+    b = plan_iteration(                        # same pattern, split bucket
+        d["ds"].graph, d["ds"].labels, d["part"], d["owner"],
+        d["local_idx"], d["table"].shape[1], roots, num_layers=2,
+        fanout=4, strategy="hopgnn", sample_seed=7,
+        batch_pad=a.batch_pad, r_max=2 * a.r_max)
+    assert (a.num_steps, a.pregather) == (b.num_steps, b.pregather)
+    assert a.r_max != b.r_max
+    step0 = tr.global_step
+    losses = tr._dispatch_stacked([a, b])
+    assert isinstance(losses, list) and len(losses) == 2
+    assert tr.global_step == step0 + 2            # both plans executed
+    assert all(np.isfinite(float(l)) for l in losses)
