@@ -4,7 +4,7 @@ PYTHON ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
 .PHONY: test test-all bench-smoke bench-plan bench-cache bench-pipeline \
-        train-smoke
+        bench-features train-smoke
 
 # Fast lane (tier-1): everything except @pytest.mark.slow (pyproject default)
 test:
@@ -35,6 +35,12 @@ bench-cache:
 # BENCH_end_to_end.json alongside the comm-model decomposition)
 bench-pipeline:
 	$(PYTHON) -m benchmarks.end_to_end --measured-only
+
+# Tiered FeatureStore sweep: steady iter time + per-tier bytes vs
+# host-budget fraction on a spilled graph 4x the host budget
+# (writes BENCH_features.json at the repo root)
+bench-features:
+	$(PYTHON) -m benchmarks.features
 
 # 3-epoch compile-once smoke train (prints first vs steady epoch times)
 train-smoke:

@@ -159,3 +159,14 @@ class CacheStore:
         return {"rows": rows_total, "bytes": rows_total * self.feature_dim
                 * self.dtype.itemsize, "c_max": self.c_max,
                 "version": self.version}
+
+    def install_from(self, feature_store,
+                     ids_per_shard: list[np.ndarray]) -> dict:
+        """Refresh the cached set straight from a
+        :class:`repro.features.FeatureStore`: the selected rows are
+        resolved through the store's tier chain (host hot tier → mmap
+        disk) instead of a caller-held dense host copy — the tier-0
+        refresh path of the feature hierarchy. The store must have bound
+        owner/local_idx maps (``take_global``)."""
+        rows = [feature_store.take_global(ids) for ids in ids_per_shard]
+        return self.install(ids_per_shard, rows)

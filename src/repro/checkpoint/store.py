@@ -44,6 +44,20 @@ def _decode(arr: np.ndarray, name: str) -> np.ndarray:
     return arr
 
 
+def _json_safe(obj):
+    """Manifest ``extra`` payloads routinely carry numpy scalars (budget
+    bucket sizes, epoch stats); coerce them instead of crashing the save."""
+    if isinstance(obj, np.integer):
+        return int(obj)
+    if isinstance(obj, np.floating):
+        return float(obj)
+    if isinstance(obj, np.bool_):
+        return bool(obj)
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    raise TypeError(f"not JSON-serializable: {type(obj)!r}")
+
+
 def save_checkpoint(directory: str | Path, step: int, tree: Any,
                     extra: Optional[dict] = None, keep: int = 3) -> Path:
     """Atomically write ``step-<step>.npz`` + manifest; prune old ones."""
@@ -69,7 +83,8 @@ def save_checkpoint(directory: str | Path, step: int, tree: Any,
     finally:
         if os.path.exists(tmp):
             os.unlink(tmp)
-    (directory / f"step-{step:08d}.json").write_text(json.dumps(manifest))
+    (directory / f"step-{step:08d}.json").write_text(
+        json.dumps(manifest, default=_json_safe))
     (directory / "latest").write_text(str(step))
 
     for old in sorted(directory.glob("step-*.npz"))[:-keep]:

@@ -328,7 +328,8 @@ def _note_trace(kind: str, cfg: GNNConfig, pregather: bool, table, cache,
 
 def get_compiled_iteration(cfg: GNNConfig, pregather: bool,
                            mesh: Optional[Mesh] = None, axis: str = "data",
-                           fold_returns: bool = False):
+                           fold_returns: bool = False,
+                           streamed: bool = False):
     """Return the cached jitted iteration fn for this engine configuration.
 
     The callable's signature is ``fn(params, table, cache, dev, denom)``
@@ -337,13 +338,20 @@ def get_compiled_iteration(cfg: GNNConfig, pregather: bool,
     size as a float32 scalar. Building the callable is cheap; *tracing*
     happens lazily per argument-shape bucket inside jit and is what the
     trace log records. ``fold_returns`` only affects per-step mode.
+
+    ``streamed`` (repro.features): the plan carries its own feature blocks
+    (``feat_local``/``feat_fetch`` in ``dev``) gathered host-side through a
+    tiered FeatureStore; ``table`` is the shared zero-width placeholder and
+    NO feature collectives run — only the gradient reduction remains.
     """
     key = (cfg, bool(pregather), bool(fold_returns), mesh,
-           axis if mesh is not None else None)
+           axis if mesh is not None else None, bool(streamed))
     fn = _COMPILE_CACHE.get(key)
     if fn is None:
-        fn = (_build_emulated(cfg, pregather, fold_returns) if mesh is None
-              else _build_sharded(cfg, pregather, fold_returns, mesh, axis))
+        fn = (_build_emulated(cfg, pregather, fold_returns, streamed)
+              if mesh is None
+              else _build_sharded(cfg, pregather, fold_returns, mesh, axis,
+                                  streamed))
         _COMPILE_CACHE[key] = fn
     return fn
 
@@ -364,7 +372,8 @@ def optimizer_cache_key(optimizer) -> tuple:
 def get_compiled_train_step(cfg: GNNConfig, pregather: bool, optimizer,
                             mesh: Optional[Mesh] = None, axis: str = "data",
                             fold_returns: bool = False,
-                            stacked: bool = False):
+                            stacked: bool = False,
+                            streamed: bool = False):
     """Cached *fused* train step: iteration + optimizer update, one program.
 
     Signature ``fn(params, opt_state, table, cache, dev, denom) ->
@@ -377,11 +386,11 @@ def get_compiled_train_step(cfg: GNNConfig, pregather: bool, optimizer,
     widths coexist without rebuilding."""
     key = ("fused", cfg, bool(pregather), bool(fold_returns), mesh,
            axis if mesh is not None else None, optimizer_cache_key(optimizer),
-           bool(stacked))
+           bool(stacked), bool(streamed))
     fn = _COMPILE_CACHE.get(key)
     if fn is None:
         fn = _build_fused(cfg, pregather, fold_returns, mesh, axis,
-                          optimizer, stacked)
+                          optimizer, stacked, streamed)
         _COMPILE_CACHE[key] = fn
     return fn
 
@@ -430,7 +439,18 @@ def prepare_iteration_args(table_global, plan, cache=None):
     Fast paths: device-resident inputs are passed through untouched; a plan
     whose device args were pre-committed by the pipeline uploader
     (``plan.committed``, see repro.train.pipeline) skips the conversion
-    walk entirely — the upload already happened off the critical path."""
+    walk entirely — the upload already happened off the critical path.
+
+    Streamed plans (repro.features): no resident table exists —
+    ``table_global=None`` is replaced by the shared zero-width placeholder
+    (the plan's feature blocks ride in ``dev``)."""
+    if table_global is None:
+        if not getattr(plan, "streamed", False):
+            raise ValueError("table_global=None is only valid for streamed "
+                             "plans (tiered FeatureStore)")
+        fl = plan.feat_local
+        table_global = empty_cache_table(plan.num_shards, fl.shape[-1],
+                                         fl.dtype)
     table_global = _as_device(table_global)
     if cache is None:
         if plan.c_max:
@@ -476,7 +496,9 @@ def run_iteration(params, table_global, plan, cfg: GNNConfig,
         table_global, plan, cache)
     fn = get_compiled_iteration(cfg, plan.pregather, mesh=mesh,
                                 fold_returns=resolve_fold_returns(
-                                    plan, fold_returns))
+                                    plan, fold_returns),
+                                streamed=bool(getattr(plan, "streamed",
+                                                      False)))
     return fn(params, table_global, cache, dev, denom)
 
 
@@ -495,7 +517,9 @@ def run_train_step(params, opt_state, table_global, plan, cfg: GNNConfig,
         table_global, plan, cache)
     fn = get_compiled_train_step(cfg, plan.pregather, optimizer, mesh=mesh,
                                  fold_returns=resolve_fold_returns(
-                                     plan, fold_returns))
+                                     plan, fold_returns),
+                                 streamed=bool(getattr(plan, "streamed",
+                                                       False)))
     return fn(params, opt_state, table_global, cache, dev, denom)
 
 
@@ -508,13 +532,17 @@ def make_sharded_iteration(cfg: GNNConfig, pregather: bool, mesh: Mesh,
 
 
 def _grads_callable(cfg: GNNConfig, pregather: bool, fold_returns: bool,
-                    mesh: Optional[Mesh], axis: str, kind: str):
+                    mesh: Optional[Mesh], axis: str, kind: str,
+                    streamed: bool = False):
     """Unjitted ``(params, table, cache, dev, denom) -> (grads, loss)``
     callable — the shared core the plain-iteration, fused, and stacked
     builders all wrap. ``kind`` labels the trace-log records."""
     if mesh is None:
         def fn(params, table_g, cache_g, dev, denom):
             _note_trace(kind, cfg, pregather, table_g, cache_g, dev)
+            if streamed:
+                return _emulated_streamed_iteration(params, cache_g, dev,
+                                                    denom, cfg)
             return _emulated_iteration(params, table_g, cache_g, dev, denom,
                                        cfg, pregather, fold_returns)
         return fn
@@ -527,27 +555,50 @@ def _grads_callable(cfg: GNNConfig, pregather: bool, fold_returns: bool,
         table = table[0]
         cache = cache[0]
         dev = jax.tree.map(lambda x: x[0], dev)
-        grads, loss = _iteration_shard(params, table, cache, dev, cfg,
-                                       pregather, fold_returns, denom, comm)
+        if streamed:
+            grads, loss = _streamed_shard(params, cache, dev, cfg, denom,
+                                          comm)
+        else:
+            grads, loss = _iteration_shard(params, table, cache, dev, cfg,
+                                           pregather, fold_returns, denom,
+                                           comm)
         return grads, loss
 
     return _shard_map(body, mesh, (P(), P(axis), P(axis), P(axis), P()),
                       (P(), P()))
 
 
+def _streamed_shard(params, cache, dev, cfg: GNNConfig, denom,
+                    comm: ShardComm):
+    """Streamed-mode shard body: the workspace is assembled entirely from
+    plan-carried feature blocks — ``[local_compact | cached | fetched]`` —
+    so no feature collective runs; only the gradient psum remains."""
+    d = dev["feat_local"].shape[-1]
+    ws = jnp.concatenate([dev["feat_local"], cache,
+                          dev["feat_fetch"].reshape(-1, d)], 0)
+    grads, loss_sum = _shard_grads(params, cfg, lambda t: ws,
+                                   dev["hop_idx"], dev["labels"],
+                                   dev["weights"])
+    grads = comm.grad_mean(grads, denom)
+    loss = jax.lax.psum(loss_sum, comm.axis) / denom
+    return grads, loss
+
+
 def _build_sharded(cfg: GNNConfig, pregather: bool, fold_returns: bool,
-                   mesh: Mesh, axis: str):
+                   mesh: Mesh, axis: str, streamed: bool = False):
     return jax.jit(_grads_callable(cfg, pregather, fold_returns, mesh, axis,
-                                   "sharded"))
+                                   "sharded", streamed))
 
 
 def _build_fused(cfg: GNNConfig, pregather: bool, fold_returns: bool,
-                 mesh: Optional[Mesh], axis: str, optimizer, stacked: bool):
+                 mesh: Optional[Mesh], axis: str, optimizer, stacked: bool,
+                 streamed: bool = False):
     """Fused iteration + optimizer update (optionally scanned over a
     K-stack of same-shape iterations), with params/opt_state donation."""
     kind = (("emulated" if mesh is None else "sharded") + "-fused"
             + ("-stacked" if stacked else ""))
-    grads_fn = _grads_callable(cfg, pregather, fold_returns, mesh, axis, kind)
+    grads_fn = _grads_callable(cfg, pregather, fold_returns, mesh, axis, kind,
+                               streamed)
 
     if not stacked:
         def step(params, opt_state, table, cache, dev, denom):
@@ -617,9 +668,34 @@ def _subjaxprs(v):
             yield from _subjaxprs(w)
 
 
-def _build_emulated(cfg: GNNConfig, pregather: bool, fold_returns: bool):
+def _build_emulated(cfg: GNNConfig, pregather: bool, fold_returns: bool,
+                    streamed: bool = False):
     return jax.jit(_grads_callable(cfg, pregather, fold_returns, None,
-                                   "data", "emulated"))
+                                   "data", "emulated", streamed))
+
+
+def _emulated_streamed_iteration(params, cache_g, dev, denom,
+                                 cfg: GNNConfig):
+    """Single-device streamed emulation: per-shard workspaces come straight
+    from the plan's feature blocks (no table, no exchange). Feature values
+    per tree position equal the resident path's exactly — only the slot
+    numbering differs — so grads/losses are bit-identical to it."""
+    ecomm = EmulatedComm()
+    n = dev["labels"].shape[0]
+    d = dev["feat_local"].shape[-1]
+    per_shard = []
+    for s in range(n):
+        ws = jnp.concatenate([dev["feat_local"][s], cache_g[s],
+                              dev["feat_fetch"][s].reshape(-1, d)], 0)
+        hop_idx = [h[s] for h in dev["hop_idx"]]
+        g, l = _shard_grads(params, cfg, lambda t, ws=ws: ws, hop_idx,
+                            dev["labels"][s], dev["weights"][s])
+        per_shard.append((g, l))
+    grads_g = jax.tree.map(lambda *xs: jnp.stack(xs),
+                           *[g for g, _ in per_shard])
+    grads = ecomm.grad_mean_global(grads_g, denom)
+    loss = sum(l for _, l in per_shard) / denom
+    return grads, loss
 
 
 def _emulated_iteration(params, table_g, cache_g, dev, denom, cfg: GNNConfig,

@@ -12,7 +12,7 @@ hidden activations.
 This module executes that schedule. Because a dim-sliced matmul summed over
 slices equals the full matmul, P³'s gradients match model-centric training
 to float tolerance — verified in tests (the same kind of placement-only
-equivalence HopGNN has). Supported models: gcn, sage, gat (input layer is
+equivalence LeapGNN has). Supported models: gcn, sage, gat (input layer is
 matmul-fronted; deepgcn/film normalize *pre-matmul* over the full feature
 vector, which P³'s slicing cannot express without an extra all-gather —
 the paper's own "P³ suits particular architectures" caveat, surfaced as

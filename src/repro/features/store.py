@@ -1,0 +1,364 @@
+"""Tiered feature storage: one `FeatureStore` behind every feature consumer.
+
+LeapGNN's premise is that features dominate and must stay put while models
+move — so the feature side deserves a real storage hierarchy instead of a
+bare host numpy array per shard. A :class:`FeatureStore` owns per-shard
+feature rows across three tiers:
+
+* **tier 0 — device cache** (repro.cache): the padded ``(N, c_max, d)``
+  remote-row table that already lives next to the compiled iteration. The
+  store does not manage it directly — the planner's hit/miss split does —
+  but the store is what the cache *refreshes from*
+  (:meth:`repro.cache.store.CacheStore.install_from`).
+* **tier 1 — host hot tier**: per-shard row caches in host RAM, sized by
+  ``host_budget_bytes`` and replaced wholesale by exact next-epoch
+  readahead (:meth:`readahead`). On a real accelerator deployment these
+  buffers would be pinned for DMA; on the CPU container they are ordinary
+  aligned numpy arrays.
+* **tier 2 — memory-mapped disk**: one ``.npy`` per shard
+  (:func:`spill_shards`), read through ``np.memmap`` fancy indexing. Rows
+  absent from the hot tier are served from here (counted — per-tier traffic
+  is first-class accounting, see :class:`TierStats`).
+
+Residency contract: ``host_budget_bytes <= 0`` means *unlimited* host
+memory — the store is **resident**, :meth:`as_dense` returns the full
+``(N, local_rows, d)`` table, and every consumer behaves exactly as it did
+before this subsystem existed (the bit-identical back-compat gate). Any
+positive budget makes the store **tiered**: the dense table is never
+materialized, the Trainer switches to the streamed engine path
+(repro.core.distributed ``streamed=True``), and reads resolve hot-tier →
+backing.
+
+Thread contract: :meth:`gather`/:meth:`take_global` may be called
+concurrently from the Trainer's plan-prefetch thread and its cache thread
+(counters are lock-protected); :meth:`readahead` installs only at epoch
+boundaries, when no plan is in flight, so hot-tier swaps never race reads.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from pathlib import Path
+from typing import Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class TierStats:
+    """Cumulative row counters per tier (bytes = rows × row_bytes).
+
+    ``t1_rows``/``t2_rows`` count *gather* traffic (hot-tier hits vs
+    backing/disk reads on the miss path); ``readahead_rows`` counts the
+    tier-2 → tier-1 promotion traffic separately so steady-state miss
+    accounting is not polluted by the prefetch that prevents the misses.
+    """
+
+    t1_rows: int = 0
+    t2_rows: int = 0
+    readahead_rows: int = 0
+    gathers: int = 0
+
+    def snapshot(self) -> tuple:
+        return (self.t1_rows, self.t2_rows, self.readahead_rows, self.gathers)
+
+    def delta(self, since: tuple) -> "TierStats":
+        return TierStats(t1_rows=self.t1_rows - since[0],
+                         t2_rows=self.t2_rows - since[1],
+                         readahead_rows=self.readahead_rows - since[2],
+                         gathers=self.gathers - since[3])
+
+
+class _HotTier:
+    """Per-shard wholesale-replacement row cache (tier 1).
+
+    Same lookup idiom as the device cache's :class:`CacheIndex`: a sorted
+    array of resident backing-row indices plus an aligned buffer, so a hit
+    test is one ``searchsorted``. Wholesale replacement (no eviction
+    bookkeeping) is the right shape here because the epoch prefetcher's
+    *exact* forecast replaces the whole resident set at epoch boundaries —
+    the same design the device cache uses.
+    """
+
+    def __init__(self, feature_dim: int, dtype):
+        self.ids = np.zeros(0, np.int64)           # sorted backing rows
+        self.buf = np.zeros((0, feature_dim), dtype)
+        self.installs = 0
+
+    @property
+    def rows(self) -> int:
+        return int(self.ids.size)
+
+    def hit_split(self, query: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """(hit_mask, buffer_positions) for backing-row indices ``query``."""
+        query = np.asarray(query, np.int64)
+        hit = np.zeros(query.size, bool)
+        pos = np.zeros(query.size, np.int64)
+        if self.ids.size and query.size:
+            p = np.searchsorted(self.ids, query)
+            ok = (p < self.ids.size) & \
+                (self.ids[np.minimum(p, self.ids.size - 1)] == query)
+            hit = ok
+            pos[ok] = p[ok]
+        return hit, pos
+
+    def install(self, rows_idx: np.ndarray, rows: np.ndarray) -> None:
+        order = np.argsort(rows_idx)
+        self.ids = np.asarray(rows_idx, np.int64)[order]
+        self.buf = np.ascontiguousarray(rows[order])
+        self.installs += 1
+
+
+class FeatureStore:
+    """One tiered store for the per-shard feature rows of a training run.
+
+    ``backing[s]`` is shard s's ``(local_rows, d)`` feature rows — a plain
+    ndarray (in-RAM tier 2, used by tests and resident stores) or an
+    ``np.memmap`` over a per-shard ``.npy`` (the out-of-core tier 2). All
+    shards are rectangular (padded to the same ``local_rows``), mirroring
+    the SPMD table layout the engine always used.
+    """
+
+    def __init__(self, backing: Sequence[np.ndarray], *,
+                 host_budget_bytes: int = 0,
+                 owner: Optional[np.ndarray] = None,
+                 local_idx: Optional[np.ndarray] = None):
+        assert len(backing) > 0 and all(b.ndim == 2 for b in backing)
+        rows0, d0 = backing[0].shape
+        assert all(b.shape == (rows0, d0) for b in backing), \
+            "backing shards must be rectangular"
+        self._backing = list(backing)
+        self.num_shards = len(backing)
+        self.local_rows = int(rows0)
+        self.feature_dim = int(d0)
+        self.dtype = np.dtype(backing[0].dtype)
+        self.host_budget_bytes = int(host_budget_bytes)
+        self.owner = None if owner is None else np.asarray(owner)
+        self.local_idx = None if local_idx is None else np.asarray(local_idx)
+        self.stats = TierStats()
+        self._lock = threading.Lock()
+        self._dense: Optional[np.ndarray] = None
+        # residency: non-positive budget = unlimited host RAM = the
+        # pre-refactor world (dense table, no hot tier, no streaming)
+        self.resident = self.host_budget_bytes <= 0
+        if self.resident:
+            self.hot_rows = self.local_rows
+            self._hot = None
+        else:
+            self.hot_rows = min(
+                self.local_rows,
+                self.host_budget_bytes
+                // max(self.num_shards * self.row_bytes, 1))
+            self._hot = [_HotTier(self.feature_dim, self.dtype)
+                         for _ in range(self.num_shards)]
+
+    # ------------------------------------------------------------------
+    # Construction
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def from_array(cls, table: np.ndarray, host_budget_bytes: int = 0,
+                   owner: Optional[np.ndarray] = None,
+                   local_idx: Optional[np.ndarray] = None) -> "FeatureStore":
+        """Back-compat constructor: wrap the classic ``(N, local_rows, d)``
+        sharded table. With the default budget the store is resident and
+        every consumer behaves bit-identically to the pre-store code."""
+        table = np.asarray(table)
+        assert table.ndim == 3, f"expected (N, rows, d), got {table.shape}"
+        st = cls([table[s] for s in range(table.shape[0])],
+                 host_budget_bytes=host_budget_bytes, owner=owner,
+                 local_idx=local_idx)
+        if st.resident:
+            st._dense = table
+        return st
+
+    @classmethod
+    def build(cls, features: np.ndarray, part: np.ndarray, num_shards: int,
+              directory: Optional[str] = None, host_budget_bytes: int = 0,
+              chunk_rows: int = 1 << 16) -> "FeatureStore":
+        """Shard ``features`` by ``part`` into a store.
+
+        With ``directory`` the per-shard rows are scattered *chunked* into
+        on-disk ``.npy`` memmaps (:func:`spill_shards`) — peak host memory
+        is one chunk, so graphs larger than host RAM shard fine as long as
+        ``features`` itself is a memmap (repro.graph.synthetic's spill
+        writer). Without it the shards live in RAM (the classic
+        ``shard_features`` layout)."""
+        from repro.graph.partition import local_index_map
+        owner, local_idx, max_sz = local_index_map(
+            np.asarray(part), num_shards)
+        if directory is None:
+            table = np.zeros((num_shards, max_sz, features.shape[1]),
+                             features.dtype)
+            table[owner, local_idx] = features
+            return cls.from_array(table, host_budget_bytes=host_budget_bytes,
+                                  owner=owner, local_idx=local_idx)
+        backing = spill_shards(features, owner, local_idx, num_shards,
+                               max_sz, directory, chunk_rows=chunk_rows)
+        return cls(backing, host_budget_bytes=host_budget_bytes,
+                   owner=owner, local_idx=local_idx)
+
+    def bind(self, owner: np.ndarray, local_idx: np.ndarray) -> "FeatureStore":
+        """Attach the global-id → (owner, local row) maps
+        (:meth:`take_global` needs them). Returns self for chaining."""
+        self.owner = np.asarray(owner)
+        self.local_idx = np.asarray(local_idx)
+        return self
+
+    # ------------------------------------------------------------------
+    # Introspection
+    # ------------------------------------------------------------------
+
+    @property
+    def row_bytes(self) -> int:
+        return self.feature_dim * self.dtype.itemsize
+
+    @property
+    def spilled(self) -> bool:
+        """True when tier 2 is disk-backed (any shard is a memmap)."""
+        return any(isinstance(b, np.memmap) for b in self._backing)
+
+    def backing_nbytes(self) -> int:
+        return self.num_shards * self.local_rows * self.row_bytes
+
+    def hot_nbytes(self) -> int:
+        if self._hot is None:
+            return self.backing_nbytes()
+        return int(sum(h.buf.nbytes for h in self._hot))
+
+    def hot_installed_rows(self, shard: int) -> int:
+        return 0 if self._hot is None else self._hot[shard].rows
+
+    def as_dense(self) -> np.ndarray:
+        """The full ``(N, local_rows, d)`` host table — resident stores
+        only (a tiered store materializing it would defeat the budget)."""
+        if not self.resident:
+            raise ValueError(
+                f"store is tiered (host_budget_bytes="
+                f"{self.host_budget_bytes}); the dense table would exceed "
+                "the host budget — use gather()/take_global()")
+        if self._dense is None:
+            self._dense = np.stack([np.asarray(b) for b in self._backing])
+        return self._dense
+
+    # ------------------------------------------------------------------
+    # The read path (tier 1 -> tier 2)
+    # ------------------------------------------------------------------
+
+    def gather(self, shard: int, rows_idx: np.ndarray) -> np.ndarray:
+        """Feature rows ``rows_idx`` (backing-row indices) of ``shard``,
+        resolved hot-tier first, backing (disk) on miss. Duplicate indices
+        are allowed and each occurrence is counted (they are real reads)."""
+        rows_idx = np.asarray(rows_idx, np.int64)
+        out = np.empty((rows_idx.size, self.feature_dim), self.dtype)
+        if rows_idx.size == 0:
+            return out
+        if self._hot is None:                      # resident: all host RAM
+            out[:] = self._backing[shard][rows_idx]
+            with self._lock:
+                self.stats.t1_rows += int(rows_idx.size)
+                self.stats.gathers += 1
+            return out
+        hot = self._hot[shard]
+        hit, pos = hot.hit_split(rows_idx)
+        n_hit = int(hit.sum())
+        if n_hit:
+            out[hit] = hot.buf[pos[hit]]
+        if n_hit < rows_idx.size:
+            miss = ~hit
+            out[miss] = self._backing[shard][rows_idx[miss]]
+        with self._lock:
+            self.stats.t1_rows += n_hit
+            self.stats.t2_rows += int(rows_idx.size) - n_hit
+            self.stats.gathers += 1
+        return out
+
+    def take_global(self, ids: np.ndarray) -> np.ndarray:
+        """Feature rows by *global vertex id*, resolved through the tier
+        chain — the store-backed replacement for the old
+        ``table[owner[ids], local_idx[ids]]`` host-copy gather."""
+        if self.owner is None or self.local_idx is None:
+            raise ValueError("take_global needs bound owner/local_idx maps "
+                             "(FeatureStore.bind)")
+        ids = np.asarray(ids, np.int64)
+        out = np.empty((ids.size, self.feature_dim), self.dtype)
+        if ids.size == 0:
+            return out
+        own = self.owner[ids]
+        for s in np.unique(own):
+            m = own == s
+            out[m] = self.gather(int(s), self.local_idx[ids[m]])
+        return out
+
+    # ------------------------------------------------------------------
+    # Readahead (tier 2 -> tier 1)
+    # ------------------------------------------------------------------
+
+    def readahead(self, shard: int, rows_idx: np.ndarray,
+                  counts: Optional[np.ndarray] = None) -> int:
+        """Promote rows into the hot tier ahead of their reads.
+
+        ``rows_idx`` are the backing rows a forecast says will be touched
+        (the epoch prefetcher's exact next-epoch sets); ``counts`` ranks
+        them when the set outgrows the budget — highest expected read count
+        first, ties broken by row index for determinism. The install is
+        wholesale (see :class:`_HotTier`). Returns rows installed."""
+        if self._hot is None:
+            return 0
+        rows_idx = np.asarray(rows_idx, np.int64)
+        if counts is not None:
+            # counts are positional: sort rows (carrying counts along) and
+            # require uniqueness — np.unique alone would silently misalign
+            counts = np.asarray(counts)
+            if counts.shape != rows_idx.shape:
+                raise ValueError("counts must align with rows_idx")
+            order = np.argsort(rows_idx, kind="stable")
+            rows_idx, counts = rows_idx[order], counts[order]
+            if rows_idx.size and np.any(np.diff(rows_idx) == 0):
+                raise ValueError("rows_idx must be unique when ranked by "
+                                 "counts")
+            if rows_idx.size > self.hot_rows:
+                keep = np.lexsort((rows_idx, -counts))[:self.hot_rows]
+                rows_idx = np.sort(rows_idx[keep])
+        else:
+            rows_idx = np.unique(rows_idx)[:self.hot_rows]
+        rows = np.empty((rows_idx.size, self.feature_dim), self.dtype)
+        if rows_idx.size:
+            rows[:] = self._backing[shard][rows_idx]
+        self._hot[shard].install(rows_idx, rows)
+        with self._lock:
+            self.stats.readahead_rows += int(rows_idx.size)
+        return int(rows_idx.size)
+
+
+def spill_shards(features: np.ndarray, owner: np.ndarray,
+                 local_idx: np.ndarray, num_shards: int, max_sz: int,
+                 directory: str, chunk_rows: int = 1 << 16
+                 ) -> list[np.memmap]:
+    """Scatter global feature rows into per-shard ``.npy`` memmaps.
+
+    The scatter walks ``features`` in row chunks, so peak host memory is
+    one chunk even when both the source (a spilled synthetic dataset) and
+    the shards are disk-backed. Shards are padded to ``max_sz`` rows
+    (rectangular, zero padding) exactly like ``shard_features``. The
+    returned memmaps are reopened read-only — the store never writes
+    tier 2 after construction (features are static during training)."""
+    from numpy.lib.format import open_memmap
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    d = int(features.shape[1])
+    paths = [directory / f"shard_{s:03d}.npy" for s in range(num_shards)]
+    mms = [open_memmap(p, mode="w+", dtype=features.dtype,
+                       shape=(max_sz, d)) for p in paths]
+    n = int(features.shape[0])
+    for a in range(0, n, chunk_rows):
+        b = min(a + chunk_rows, n)
+        chunk = np.asarray(features[a:b])
+        own = owner[a:b]
+        for s in np.unique(own):
+            m = own == s
+            mms[s][local_idx[a:b][m]] = chunk[m]
+    for mm in mms:
+        mm.flush()
+    del mms
+    return [np.load(p, mmap_mode="r") for p in paths]

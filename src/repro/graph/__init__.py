@@ -1,6 +1,6 @@
 """Graph substrate: CSR storage, synthetic datasets, partitioning, sampling.
 
-Everything in this package is *host-side* (numpy): in DGL — and in HopGNN,
+Everything in this package is *host-side* (numpy): in DGL — and in LeapGNN,
 which builds on it — graph sampling and partition bookkeeping run on CPU,
 feeding fixed-shape tensors to the accelerator. We keep that split: this
 package never imports jax.

@@ -3,7 +3,7 @@
 Three partitioners, matching the paper's evaluation matrix:
 
 * ``hash_partition`` — P³'s random hash partitioning (no locality; the
-  baseline HopGNN is *not* designed for, §8 "Generality").
+  baseline LeapGNN is *not* designed for, §8 "Generality").
 * ``ldg_partition`` — Linear Deterministic Greedy streaming partitioner
   [Stanton & Kliot, KDD'12]: our METIS stand-in. METIS itself is not
   available offline; LDG is the standard streaming approximation that, on
@@ -14,7 +14,7 @@ Three partitioners, matching the paper's evaluation matrix:
 
 All return an (n,) int32 part id array with parts of near-equal size
 (capacity-constrained), which is what keeps the redistribution step of
-HopGNN load-balanced (§5.1 step 1).
+LeapGNN load-balanced (§5.1 step 1).
 """
 from __future__ import annotations
 

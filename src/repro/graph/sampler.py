@@ -95,7 +95,7 @@ def _sample_neighbors(g: CSRGraph, frontier: np.ndarray, fanout: int,
       * ``rng`` — stateful draw (fresh neighborhoods every call).
       * ``seed`` — *stateless* hash of (vertex, slot, hop, seed): the sampled
         tree below a root is a pure function of (root, seed), independent of
-        which strategy/step groups the root. This is what makes HopGNN's
+        which strategy/step groups the root. This is what makes LeapGNN's
         accuracy-fidelity claim (§5.1, Table 3) a *bitwise-testable*
         gradient-parity property instead of a statistical one.
     """

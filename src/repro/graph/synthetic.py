@@ -14,6 +14,8 @@ Scales are reduced (``scale`` multiplier) to fit a 1-core CPU container; the
 """
 from __future__ import annotations
 
+from pathlib import Path
+
 import numpy as np
 
 from repro.graph.structs import CSRGraph, GraphDataset
@@ -71,8 +73,21 @@ def community_graph(n: int, avg_deg: float, n_communities: int,
 
 def make_dataset(name: str, scale: float = 1.0, seed: int = 0,
                  feat_dim: int | None = None,
-                 train_frac: float = 0.1) -> GraphDataset:
-    """Build a named synthetic dataset (see ``DATASETS``)."""
+                 train_frac: float = 0.1,
+                 spill_dir: str | None = None,
+                 feature_budget_bytes: int = 0,
+                 spill_chunk_rows: int = 1 << 16) -> GraphDataset:
+    """Build a named synthetic dataset (see ``DATASETS``).
+
+    Spill-to-disk (repro.features): with ``spill_dir`` set, features whose
+    total bytes exceed ``feature_budget_bytes`` (0 = always spill when a
+    dir is given) are *generated chunked* straight into an on-disk ``.npy``
+    memmap instead of host RAM — peak host memory is one
+    ``spill_chunk_rows`` chunk, so graphs larger than the host budget
+    generate fine. The Generator draws values sequentially from its
+    bit-stream, so chunked draws are bitwise identical to the one-shot
+    in-RAM array (asserted in tests) — spilling never changes the dataset.
+    """
     if name not in DATASETS:
         raise KeyError(f"unknown dataset {name!r}; have {sorted(DATASETS)}")
     n0, avg_deg, dim0, n_classes = DATASETS[name]
@@ -82,12 +97,32 @@ def make_dataset(name: str, scale: float = 1.0, seed: int = 0,
     g, comm = community_graph(n, avg_deg, n_comm, p_intra=0.85, seed=seed)
 
     rng = np.random.default_rng(seed + 1)
-    feats = rng.standard_normal((n, dim), dtype=np.float32)
-    # Make labels weakly predictable from community + neighborhood so that
-    # accuracy-parity experiments (Table 3) have signal to learn.
-    centers = rng.standard_normal((n_classes, dim), dtype=np.float32)
     labels = (comm % n_classes).astype(np.int32)
-    feats += 0.5 * centers[labels]
+    spill = (spill_dir is not None
+             and (feature_budget_bytes <= 0
+                  or n * dim * 4 > feature_budget_bytes))
+    if spill:
+        from numpy.lib.format import open_memmap
+        path = Path(spill_dir)
+        path.mkdir(parents=True, exist_ok=True)
+        fpath = path / f"{name}_features.npy"
+        mm = open_memmap(fpath, mode="w+", dtype=np.float32, shape=(n, dim))
+        for a in range(0, n, spill_chunk_rows):
+            b = min(a + spill_chunk_rows, n)
+            mm[a:b] = rng.standard_normal((b - a, dim), dtype=np.float32)
+        centers = rng.standard_normal((n_classes, dim), dtype=np.float32)
+        # Make labels weakly predictable from community + neighborhood so
+        # that accuracy-parity experiments (Table 3) have signal to learn.
+        for a in range(0, n, spill_chunk_rows):
+            b = min(a + spill_chunk_rows, n)
+            mm[a:b] += 0.5 * centers[labels[a:b]]
+        mm.flush()
+        del mm
+        feats = np.load(fpath, mmap_mode="r")
+    else:
+        feats = rng.standard_normal((n, dim), dtype=np.float32)
+        centers = rng.standard_normal((n_classes, dim), dtype=np.float32)
+        feats += 0.5 * centers[labels]
     train_mask = rng.random(n) < train_frac
     return GraphDataset(name=name, graph=g, features=feats, labels=labels,
                         train_mask=train_mask, num_classes=n_classes,

@@ -1,6 +1,6 @@
 """Pallas TPU kernels: feature-row gather and fused gather+aggregate.
 
-These are the compute hot-spots of HopGNN's data path (DESIGN.md §2):
+These are the compute hot-spots of LeapGNN's data path (DESIGN.md §2):
 
 * ``gather_rows``  — workspace row gather ``out[i] = table[idx[i]]``; the
   inner op of pre-gathering (§5.2) and of every tree-block feature load.

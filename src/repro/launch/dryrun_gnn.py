@@ -3,7 +3,7 @@ if __name__ == "__main__":
     # Script-only (see dryrun.py): never set XLA_FLAGS on plain import.
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
-"""GNN-side dry-run: lower + compile the HopGNN shard_map iteration on the
+"""GNN-side dry-run: lower + compile the LeapGNN shard_map iteration on the
 production data mesh (256 shards single-pod / 512 two-pod).
 
 The paper runs 4 GPU servers; this proves the SPMD engine's collectives

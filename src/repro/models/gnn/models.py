@@ -80,7 +80,7 @@ def gnn_loss(params, cfg: GNNConfig, feats, labels, weight=None):
     """Mean softmax cross-entropy over root vertices.
 
     ``weight``: optional (B,) 0/1 mask — padding roots contribute 0 loss
-    (needed by HopGNN's padded micrograph batches). Normalization uses the
+    (needed by LeapGNN's padded micrograph batches). Normalization uses the
     *true* count so gradient accumulation across time steps matches the
     model-centric gradient exactly (accuracy-fidelity invariant, §5.1)."""
     logits = gnn_forward(params, cfg, feats)

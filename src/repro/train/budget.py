@@ -57,8 +57,11 @@ class ShapeBudget:
     batch_pad: int = 0
     r_max: int = 0
     c_max: int = 0            # cached-region height (global, not per-pattern)
+    l_max: int = 0            # streamed compacted-local height (per-pattern;
+    #                           repro.features — 0 when not streaming)
     min_batch_pad: int = 8
     min_r_max: int = 8
+    min_l_max: int = 8
     max_rebuckets: int = 8
     # Probe headroom for r_max: the probe only sees one iteration's exact
     # per-peer fetch counts, and those vary batch-to-batch (sampling is
@@ -71,11 +74,18 @@ class ShapeBudget:
     # real (weight-0) tree compute, and overflow there is assignment-skew
     # driven, which the per-pattern buckets already isolate.
     r_max_headroom: float = 1.5
+    # l_max headroom (streamed mode): the touched-local set varies batch to
+    # batch like per-peer fetches do, but less violently (it is bounded by
+    # the whole tree, most of which IS local) — a lighter pad suffices.
+    l_max_headroom: float = 1.25
     # --- counters (observability; the compile-once tests read these) ---
     rebuckets: int = 0
     plans_built: int = 0
     probes: int = 0
     buckets: dict = dataclasses.field(default_factory=dict)
+    # num_steps -> l_max bucket, kept SEPARATE from ``buckets`` so existing
+    # readers of the [batch_pad, r_max] pairs never see a layout change
+    l_buckets: dict = dataclasses.field(default_factory=dict)
 
     def __post_init__(self):
         # constructor-given sizes become the seed for every new bucket
@@ -85,14 +95,17 @@ class ShapeBudget:
     def signature(self) -> tuple[int, int]:
         return (self.batch_pad, self.r_max)
 
-    def bucket_shapes(self, num_steps) -> "tuple[int, int, int] | None":
-        """(batch_pad, r_max, c_max) of the bucket serving this merge
+    def bucket_shapes(self, num_steps) -> "tuple[int, int, int, int] | None":
+        """(batch_pad, r_max, c_max, l_max) of the bucket serving this merge
         pattern, or None if the pattern hasn't been planned yet. The
         pipeline uploader's ping-pong stability check reads this: every
         committed plan of a pattern must carry exactly these shapes, or
-        an upload would imply a retrace."""
+        an upload would imply a retrace. ``l_max`` is 0 for patterns that
+        have never planned streamed."""
         b = self.buckets.get(int(num_steps))
-        return None if b is None else (int(b[0]), int(b[1]), int(self.c_max))
+        return None if b is None else (int(b[0]), int(b[1]), int(self.c_max),
+                                       int(self.l_buckets.get(int(num_steps),
+                                                              0)))
 
     def grow(self, field: str, needed: int) -> None:
         """Explicit overflow re-bucketing: jump to the next power-of-two
@@ -107,6 +120,12 @@ class ShapeBudget:
         elif field == "c_max":
             # global (cross-pattern) dimension — see module doc
             self.c_max = next_bucket(needed, self.c_max + 1)
+            return
+        elif field == "l_max":
+            # per-pattern like batch_pad/r_max, but stored in l_buckets
+            self.l_max = next_bucket(needed, self.l_max + 1)
+            if self._active_key is not None:
+                self.l_buckets[self._active_key] = self.l_max
             return
         else:
             raise ValueError(f"unknown budget field {field!r}")
@@ -138,24 +157,39 @@ class ShapeBudget:
         if planner is None:
             from repro.core.strategies import plan_iteration as planner
         key = self._pattern_key(plan_kwargs)
+        fs = plan_kwargs.get("feature_store")
+        streamed = fs is not None and not getattr(fs, "resident", True)
         bucket = self.buckets.get(key)
+        need_l = streamed and key not in self.l_buckets
+        probe = None
+
+        def _probe():
+            # First plan of this pattern: probe exact sizes once, then
+            # bucket. The probe is host-side numpy only — it never touches
+            # the device engine, so it costs one extra planning pass per
+            # *pattern* and nothing after. (In streamed mode the probe does
+            # pay a host feature gather; still once per pattern.)
+            self.probes += 1
+            return planner(**plan_kwargs)
+
         if bucket is None:
             seed_bp, seed_rm = self._seed
-            if seed_bp and seed_rm:
+            if seed_bp and seed_rm and not need_l:
                 bucket = [seed_bp, seed_rm]
             else:
-                # First plan of this pattern: probe exact sizes once, then
-                # bucket. The probe is host-side numpy only — it never
-                # touches the device engine, so it costs one extra planning
-                # pass per *pattern* and nothing after.
-                probe = planner(**plan_kwargs)
-                self.probes += 1
+                probe = _probe()
                 bucket = [next_bucket(probe.batch_pad,
                                       max(self.min_batch_pad, seed_bp)),
                           next_bucket(int(probe.r_max
                                           * max(self.r_max_headroom, 1.0)),
                                       max(self.min_r_max, seed_rm))]
             self.buckets[key] = bucket
+        if need_l:
+            if probe is None:
+                probe = _probe()
+            self.l_buckets[key] = next_bucket(
+                int(probe.l_max * max(self.l_max_headroom, 1.0)),
+                self.min_l_max)
         self._active_key = key
         self.batch_pad, self.r_max = bucket
         # c_max ceiling only applies to cache-aware plans; passing 0/None
@@ -163,10 +197,14 @@ class ShapeBudget:
         cache_kw = {}
         if plan_kwargs.get("cache_index") is not None:
             cache_kw = dict(c_max=self.c_max or None)
+        stream_kw = {}
+        if streamed:
+            self.l_max = self.l_buckets[key]
+            stream_kw = dict(l_max=self.l_max)
         for _ in range(self.max_rebuckets + 1):
             try:
                 out = planner(**plan_kwargs, batch_pad=self.batch_pad,
-                              r_max=self.r_max, **cache_kw)
+                              r_max=self.r_max, **cache_kw, **stream_kw)
                 self.plans_built += 1
                 if getattr(out, "c_max", 0) > self.c_max:
                     self.c_max = int(out.c_max)    # first learn, no rebucket
@@ -175,6 +213,52 @@ class ShapeBudget:
                 self.grow(e.field, e.needed)
                 if e.field == "c_max":
                     cache_kw = dict(c_max=self.c_max)
+                elif e.field == "l_max":
+                    stream_kw = dict(l_max=self.l_max)
         raise RuntimeError(
             f"shape budget failed to converge after {self.max_rebuckets} "
             f"re-buckets (batch_pad={self.batch_pad}, r_max={self.r_max})")
+
+    # ------------------------------------------------------------------
+    # Persistence (repro.checkpoint): a resumed run must reuse the exact
+    # buckets of the original run, or its first epoch re-probes/re-traces.
+    # ------------------------------------------------------------------
+
+    def state_dict(self) -> dict:
+        """JSON-serializable bucket state. Buckets are stored as
+        ``[key, ...]`` rows (not an object) so integer pattern keys survive
+        the JSON round-trip with their type intact."""
+        return {
+            "buckets": [[k, int(v[0]), int(v[1])]
+                        for k, v in self.buckets.items()],
+            "l_buckets": [[k, int(v)] for k, v in self.l_buckets.items()],
+            "c_max": int(self.c_max),
+            "batch_pad": int(self.batch_pad),
+            "r_max": int(self.r_max),
+            "l_max": int(self.l_max),
+            "r_max_headroom": float(self.r_max_headroom),
+            "l_max_headroom": float(self.l_max_headroom),
+            "rebuckets": int(self.rebuckets),
+        }
+
+    def load_state(self, state: dict) -> None:
+        """Restore :meth:`state_dict` output: every pattern the original
+        run learned plans straight into its old bucket — no probe, no
+        overflow, and (process-wide compile cache permitting) no retrace
+        on the resumed run's first epoch."""
+        def _k(k):
+            return k if isinstance(k, str) else int(k)
+        self.buckets = {_k(k): [int(bp), int(rm)]
+                        for k, bp, rm in state.get("buckets", [])}
+        self.l_buckets = {_k(k): int(l)
+                          for k, l in state.get("l_buckets", [])}
+        self.c_max = int(state.get("c_max", self.c_max))
+        self.batch_pad = int(state.get("batch_pad", self.batch_pad))
+        self.r_max = int(state.get("r_max", self.r_max))
+        self.l_max = int(state.get("l_max", self.l_max))
+        self.r_max_headroom = float(state.get("r_max_headroom",
+                                              self.r_max_headroom))
+        self.l_max_headroom = float(state.get("l_max_headroom",
+                                              self.l_max_headroom))
+        self.rebuckets = int(state.get("rebuckets", self.rebuckets))
+        self._active_key = None

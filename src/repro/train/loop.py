@@ -70,6 +70,7 @@ import numpy as np
 
 from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
 from repro.core import distributed as engine
+from repro.features import FeatureStore
 from repro.core.merging import MergingController
 from repro.core.micrograph import hopgnn_assignment
 from repro.core.strategies import IterationPlan, Strategy
@@ -108,6 +109,15 @@ class EpochStats:
     dispatch_s: float = 0.0     # host time inside dispatch calls (pipelined
     #                             mode only; the device keeps running after
     #                             each dispatch returns)
+    # --- tiered feature store (repro.features; zeros when resident) ---
+    streamed: bool = False      # out-of-core mode: plans carry features
+    tier1_rows: int = 0         # host hot-tier rows served to plan gathers
+    tier2_rows: int = 0         # backing/mmap rows served (hot-tier misses)
+    tier1_bytes: int = 0
+    tier2_bytes: int = 0
+    upload_bytes: int = 0       # plan-carried feature bytes shipped to dev
+    readahead_s: float = 0.0    # blocking tier-2→tier-1 install time at the
+    #                             epoch boundary (forecast overlap excluded)
 
 
 class Trainer:
@@ -145,10 +155,26 @@ class Trainer:
         self.part = np.asarray(part)
         self.owner = np.asarray(owner)
         self.local_idx = np.asarray(local_idx)
-        self._table_np = np.asarray(table)
+        # repro.features: every feature read goes through one tiered store.
+        # A plain (N, local_rows, d) array is wrapped resident (bit-identical
+        # to the pre-store Trainer); a tiered store switches the engine to
+        # streamed mode — plans carry their feature blocks, no device table.
+        if isinstance(table, FeatureStore):
+            self.store = table.bind(self.owner, self.local_idx)
+        else:
+            self.store = FeatureStore.from_array(
+                np.asarray(table), owner=self.owner,
+                local_idx=self.local_idx)
+        self.streamed = not self.store.resident
+        if self.streamed and not pregather:
+            raise ValueError(
+                "a tiered FeatureStore requires pregather=True: per-step "
+                "exchange gathers from a device-resident table, which "
+                "out-of-core mode exists to avoid")
         # device-resident once: re-uploading the feature table every
         # iteration was part of the per-step overhead this subsystem removes
-        self.table = jnp.asarray(table)
+        self.table = (jnp.asarray(self.store.as_dense())
+                      if self.store.resident else None)
         self.cfg = cfg
         self.optimizer = optimizer or adamw(1e-3)
         # async pipeline / fused dispatch (repro.train.pipeline)
@@ -221,32 +247,43 @@ class Trainer:
         self._cache_lock = threading.Lock()
         self._cache_fut = None
         if cache_policy:
-            from repro.cache import (CacheStore, EpochPrefetcher,
-                                     budget_rows, make_policy)
+            from repro.cache import CacheStore, budget_rows, make_policy
             from repro.train.budget import next_bucket
-            d = int(self._table_np.shape[-1])
+            d = self.store.feature_dim
             self.cache_rows = budget_rows(cache_budget_bytes, d,
-                                          self._table_np.dtype.itemsize)
+                                          self.store.dtype.itemsize)
             if self.cache_rows > 0:
                 # pre-size to the budget's pow2 bucket: a cold (even empty)
                 # cache already has its final device shape, so content
                 # refreshes never retrace
                 self.cache_store = CacheStore(
                     self.num_shards, d, c_max=next_bucket(self.cache_rows),
-                    dtype=self._table_np.dtype)
+                    dtype=self.store.dtype)
                 self._cache_policy = make_policy(
                     cache_policy, graph=self.graph, owner=self.owner,
                     num_shards=self.num_shards)
-                self._cache_prefetcher = EpochPrefetcher(
-                    graph=self.graph, part=self.part, owner=self.owner,
-                    num_shards=self.num_shards,
-                    num_layers=self.cfg.num_layers, fanout=self.cfg.fanout,
-                    roots_for=self._prefetch_roots_for,
-                    sample_seed_for=lambda e, i:
-                        self.sample_seed_base + e * 10_000 + i,
-                    strategy=self.strategy,
-                    fold_steps=self._prefetch_fold)
-                self._prefetch_batch = 0   # bound per fit() call
+                self._cache_prefetcher = self._make_prefetcher()
+        # --- tiered-store readahead (repro.features; streamed mode) ---
+        # the exact next-epoch forecast that refreshes the device cache also
+        # drives tier-2 → tier-1 promotion, so a prefetcher exists whenever
+        # the store is tiered, cache layer or not
+        self._prefetch_batch = 0           # bound per fit() call
+        self._readahead_fut = None
+        self._readahead_enabled = self.streamed and self.store.hot_rows > 0
+        if self._readahead_enabled and self._cache_prefetcher is None:
+            self._cache_prefetcher = self._make_prefetcher()
+
+    def _make_prefetcher(self):
+        from repro.cache import EpochPrefetcher
+        return EpochPrefetcher(
+            graph=self.graph, part=self.part, owner=self.owner,
+            num_shards=self.num_shards,
+            num_layers=self.cfg.num_layers, fanout=self.cfg.fanout,
+            roots_for=self._prefetch_roots_for,
+            sample_seed_for=lambda e, i:
+                self.sample_seed_base + e * 10_000 + i,
+            strategy=self.strategy,
+            fold_steps=self._prefetch_fold)
 
     @classmethod
     def from_env(cls, env: dict, cfg: GNNConfig, **kw) -> "Trainer":
@@ -263,7 +300,7 @@ class Trainer:
 
     @property
     def num_shards(self) -> int:
-        return int(self._table_np.shape[0])
+        return self.store.num_shards
 
     def _roots_for(self, epoch: int, it: int, batch_per_model: int):
         if self.root_fn is not None:
@@ -305,11 +342,12 @@ class Trainer:
         plan = self.budget.plan(
             graph=self.graph, labels=self.labels, part=self.part,
             owner=self.owner, local_idx=self.local_idx,
-            local_rows=int(self._table_np.shape[1]),
+            local_rows=self.store.local_rows,
             roots_per_model=roots, num_layers=self.cfg.num_layers,
             fanout=self.cfg.fanout, strategy=self.strategy,
             pregather=self.pregather, assignment=assignment,
             cache_index=cache_index,
+            feature_store=self.store if self.streamed else None,
             executor=self._get_plan_pool(),
             sample_seed=self.sample_seed_base + epoch * 10_000 + it)
         if self._cache_policy is not None and not self._cache_policy.static \
@@ -379,9 +417,9 @@ class Trainer:
         return fold_assignment(amat, ctl.pattern_steps, self.selector)
 
     def _cache_select_install(self, hot=None) -> dict:
-        """Run the admission policy (optionally against predicted hot sets),
-        gather the selected rows from the host feature copy, and install
-        them into the store."""
+        """Run the admission policy (optionally against predicted hot sets)
+        and refresh the device cache straight from the FeatureStore's tier
+        chain (tier-0 refresh path; repro.features)."""
         with self._cache_lock:
             if hot is not None:
                 sel = [self._cache_policy.select(s, self.cache_rows,
@@ -390,8 +428,7 @@ class Trainer:
             else:
                 sel = [self._cache_policy.select(s, self.cache_rows)
                        for s in range(self.num_shards)]
-        rows = [self._features_of(ids) for ids in sel]
-        return self.cache_store.install(sel, rows)
+        return self.cache_store.install_from(self.store, sel)
 
     def _cache_compute(self, epoch: int, iters: int):
         """Cache-thread job: predict epoch's requests (deterministic
@@ -440,6 +477,51 @@ class Trainer:
         return time.perf_counter() - t0
 
     # ------------------------------------------------------------------
+    # Tiered-store readahead (repro.features, tier 2 -> tier 1)
+    # ------------------------------------------------------------------
+
+    def _readahead_compute(self, epoch: int, iters: int):
+        """Cache-thread job: the per-OWNING-shard (ids, counts) forecast of
+        every row each shard will *serve* next epoch — exact under the
+        deterministic sampler, same replay the cache refresh uses."""
+        return self._cache_prefetcher.epoch_touched(epoch, iters)
+
+    def _readahead_install(self, touched) -> int:
+        """Swap the forecast rows into each shard's host hot tier. Sorted by
+        backing row so the store's unique() keeps counts aligned."""
+        installed = 0
+        for p, (ids, cnt) in enumerate(touched):
+            rows = self.local_idx[ids]
+            order = np.argsort(rows, kind="stable")
+            installed += self.store.readahead(p, rows[order],
+                                              counts=cnt[order])
+        return installed
+
+    def _readahead_epoch_begin(self, epoch: int, first_epoch: int,
+                               epochs: int, iters: int,
+                               batch_per_model: int, cache_exec) -> float:
+        """Promote next epoch's rows at the epoch boundary — no plan is in
+        flight then, so the wholesale hot-tier swap never races a gather
+        (the store's thread contract). The forecast for epoch e+1 runs on
+        the cache thread *during* epoch e; only the first epoch (and the
+        install itself) block. Runs BEFORE the cache refresh so tier-0
+        refresh gathers hit the freshly-warmed hot tier."""
+        if not self._readahead_enabled:
+            return 0.0
+        t0 = time.perf_counter()
+        self._prefetch_batch = batch_per_model
+        if self._readahead_fut is not None:
+            touched = self._readahead_fut.result()
+            self._readahead_fut = None
+            self._readahead_install(touched)
+        else:
+            self._readahead_install(self._readahead_compute(epoch, iters))
+        if cache_exec is not None and epoch + 1 < epochs:
+            self._readahead_fut = cache_exec.submit(
+                self._readahead_compute, epoch + 1, iters)
+        return time.perf_counter() - t0
+
+    # ------------------------------------------------------------------
     # Device stepping
     # ------------------------------------------------------------------
 
@@ -455,10 +537,14 @@ class Trainer:
                     f"vs store "
                     f"{store.version if store is not None else 'absent'}")
             return store.device_table
+        return self._empty_table()
+
+    def _empty_table(self):
+        """Shared (N, 0, d) zero-width device table — stands in for both a
+        disabled cache and (streamed mode) the absent feature table."""
         if self._empty_cache is None:
             self._empty_cache = engine.empty_cache_table(
-                self.num_shards, int(self._table_np.shape[-1]),
-                self._table_np.dtype)
+                self.num_shards, self.store.feature_dim, self.store.dtype)
         return self._empty_cache
 
     def train_step(self, plan: IterationPlan):
@@ -484,7 +570,8 @@ class Trainer:
         fn = engine.get_compiled_train_step(
             self.cfg, plan.pregather, self.optimizer, mesh=self.mesh,
             fold_returns=engine.resolve_fold_returns(plan,
-                                                     self.fold_returns))
+                                                     self.fold_returns),
+            streamed=bool(getattr(plan, "streamed", False)))
         table, cache_tab, dev, denom = engine.prepare_iteration_args(
             self.table, plan, cache_tab)
         self.params, self.opt_state, loss = fn(
@@ -503,8 +590,8 @@ class Trainer:
                     or p.num_steps != p0.num_steps):
                 raise ValueError("stacked plans must share mode, cache "
                                  "version, and merge pattern")
-            if (p.batch_pad, p.r_max, p.c_max) != (p0.batch_pad, p0.r_max,
-                                                   p0.c_max):
+            if (p.batch_pad, p.r_max, p.c_max, p.l_max) != \
+                    (p0.batch_pad, p0.r_max, p0.c_max, p0.l_max):
                 # a mid-epoch budget re-bucket split the group's shapes
                 # (rare: only when sampling variance beats the r_max
                 # headroom); fall back to per-plan dispatch — one extra
@@ -515,10 +602,12 @@ class Trainer:
         fn = engine.get_compiled_train_step(
             self.cfg, p0.pregather, self.optimizer, mesh=self.mesh,
             fold_returns=engine.resolve_fold_returns(p0, self.fold_returns),
-            stacked=True)
+            stacked=True, streamed=bool(getattr(p0, "streamed", False)))
         dev_stack, denoms = stack_committed(plans)
+        table = (engine._as_device(self.table) if self.table is not None
+                 else self._empty_table())
         self.params, self.opt_state, losses = fn(
-            self.params, self.opt_state, engine._as_device(self.table),
+            self.params, self.opt_state, table,
             cache_tab, dev_stack, denoms)
         self.global_step += len(plans)
         return losses
@@ -542,6 +631,7 @@ class Trainer:
         traced: list[bool] = []
         losses: list[float] = []
         remote, num_steps, cache_hits = 0, 0, 0
+        t1 = t2 = up = 0
         for it in range(iters):
             plan = fut.result()
             if it + 1 < iters:
@@ -557,13 +647,19 @@ class Trainer:
             traced.append(engine.trace_count() > tc0)
             remote += plan.remote_rows_exact
             cache_hits += plan.cache_hit_rows
+            ts = getattr(plan, "tier_stats", None)
+            if ts:
+                t1 += ts["tier1_rows"]
+                t2 += ts["tier2_rows"]
+                up += ts["upload_bytes"]
             num_steps = plan.num_steps
         steady = [t for t, tr in zip(iter_times, traced) if not tr]
         return EpochRunResult(
             losses=losses, wall_s=time.perf_counter() - t_epoch,
             steady_iter_s=float(np.mean(steady)) if steady else None,
             dispatch_s=0.0, traces=int(sum(traced)), remote_rows=remote,
-            cache_hit_rows=cache_hits, num_steps=num_steps)
+            cache_hit_rows=cache_hits, num_steps=num_steps,
+            tier1_rows=t1, tier2_rows=t2, upload_bytes=up)
 
     def fit(self, epochs: int, iters_per_epoch: int,
             batch_per_model: int = 16, eval_every: int = 0,
@@ -594,13 +690,20 @@ class Trainer:
             from repro.train.pipeline import PlanUploader
             self._uploader = PlanUploader(budget=self.budget)
         # the cache refresh computation gets its own thread: it must not
-        # block the plan double-buffer (and vice versa)
+        # block the plan double-buffer (and vice versa). The tiered store's
+        # readahead forecast shares it (both are epoch-boundary jobs on the
+        # same deterministic replay; the single worker serializes them).
+        need_cache_thread = (self.cache_enabled and self.cache_prefetch
+                             and not self._cache_policy.static)
         cache_exec = (ThreadPoolExecutor(max_workers=1,
                                          thread_name_prefix="cache")
-                      if self.cache_enabled and self.cache_prefetch
-                      and not self._cache_policy.static else None)
+                      if need_cache_thread or self._readahead_enabled
+                      else None)
         try:
             for epoch in range(start_epoch, epochs):
+                readahead_s = self._readahead_epoch_begin(
+                    epoch, start_epoch, epochs, iters_per_epoch,
+                    batch_per_model, cache_exec)
                 refresh_s = self._cache_epoch_begin(
                     epoch, start_epoch, epochs, iters_per_epoch,
                     batch_per_model, cache_exec)
@@ -623,8 +726,7 @@ class Trainer:
                        if eval_every and (epoch + 1) % eval_every == 0
                        else None)
                 plan_time, plans_built = self._drain_plan_stats()
-                row_bytes = (int(self._table_np.shape[-1])
-                             * self._table_np.dtype.itemsize)
+                row_bytes = self.store.row_bytes
                 st = EpochStats(epoch=epoch,
                                 loss=sum(res.losses) / iters_per_epoch,
                                 time_s=res.wall_s,
@@ -643,7 +745,14 @@ class Trainer:
                                 * row_bytes,
                                 cache_refresh_s=refresh_s,
                                 pipelined=self.pipeline,
-                                dispatch_s=res.dispatch_s)
+                                dispatch_s=res.dispatch_s,
+                                streamed=self.streamed,
+                                tier1_rows=res.tier1_rows,
+                                tier2_rows=res.tier2_rows,
+                                tier1_bytes=res.tier1_rows * row_bytes,
+                                tier2_bytes=res.tier2_rows * row_bytes,
+                                upload_bytes=res.upload_bytes,
+                                readahead_s=readahead_s)
                 stats.append(st)
                 if log is not None:
                     log(f"epoch {epoch}: loss {st.loss:.4f} "
@@ -654,6 +763,10 @@ class Trainer:
                         + (f" cache-hit {100 * st.cache_hit_rate:.1f}%"
                            f" refresh {st.cache_refresh_s:.2f}s"
                            if self.cache_enabled else "")
+                        + (f" t1-rows {st.tier1_rows} t2-rows "
+                           f"{st.tier2_rows} readahead "
+                           f"{st.readahead_s:.2f}s"
+                           if self.streamed else "")
                         + ("" if st.compile_free else " (all-compile)")
                         + (f" acc {100 * acc:.1f}%" if acc is not None
                            else ""))
@@ -664,6 +777,7 @@ class Trainer:
             if cache_exec is not None:
                 cache_exec.shutdown(wait=False, cancel_futures=True)
                 self._cache_fut = None
+                self._readahead_fut = None
             self._close_plan_pool()
         return stats
 
@@ -682,7 +796,7 @@ class Trainer:
     # ------------------------------------------------------------------
 
     def _features_of(self, ids: np.ndarray) -> np.ndarray:
-        return self._table_np[self.owner[ids], self.local_idx[ids]]
+        return self.store.take_global(ids)
 
     def evaluate(self, n_eval: int = 256, seed: int = 123,
                  nodes: Optional[np.ndarray] = None) -> float:
@@ -711,7 +825,11 @@ class Trainer:
                  "merge_frozen": (bool(self.controller.frozen)
                                   if self.controller else False),
                  "merge_last_time": (self.controller.last_epoch_time
-                                     if self.controller else None)}
+                                     if self.controller else None),
+                 # bucket state rides along so a resumed run plans straight
+                 # into the original run's shapes — no probe, no first-epoch
+                 # retrace (repro.train.budget persistence)
+                 "budget_state": self.budget.state_dict()}
         save_checkpoint(self.ckpt_dir, self.global_step,
                         {"params": self.params, "opt": self.opt_state},
                         extra=extra, keep=self.ckpt_keep)
@@ -731,6 +849,9 @@ class Trainer:
             self.params = params
             self.opt_state = self.optimizer.init(self.params)
         self.global_step = step
+        bs = extra.get("budget_state")
+        if bs:
+            self.budget.load_state(bs)
         lt = extra.get("merge_last_time")
         self._resume_pattern = (int(extra.get("merge_steps", 0)),
                                 bool(extra.get("merge_frozen", False)),

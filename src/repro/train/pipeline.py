@@ -91,13 +91,16 @@ class PlanUploader:
         if self.budget is not None:
             expect = self.budget.bucket_shapes(plan.num_steps)
             if expect is not None:
-                bp, rm, cm = expect
+                bp, rm, cm, lm = expect
+                l_max = getattr(plan, "l_max", 0)
                 if (plan.batch_pad, plan.r_max) != (bp, rm) \
-                        or plan.c_max not in (0, cm):
+                        or plan.c_max not in (0, cm) \
+                        or l_max not in (0, lm):
                     raise AssertionError(
                         f"plan shapes ({plan.batch_pad}, {plan.r_max}, "
-                        f"{plan.c_max}) drifted from budget bucket "
-                        f"({bp}, {rm}, {cm}) for pattern {plan.num_steps}")
+                        f"{plan.c_max}, {l_max}) drifted from budget bucket "
+                        f"({bp}, {rm}, {cm}, {lm}) for pattern "
+                        f"{plan.num_steps}")
         dev = jax.tree.map(
             lambda x: x if isinstance(x, jax.Array) else jax.device_put(x),
             plan.device_args())
@@ -156,6 +159,10 @@ class EpochRunResult:
     remote_rows: int
     cache_hit_rows: int
     num_steps: int
+    # --- streamed feature path (repro.features; zeros when resident) ---
+    tier1_rows: int = 0          # host hot-tier rows served to plan gathers
+    tier2_rows: int = 0          # backing/mmap rows served (hot-tier misses)
+    upload_bytes: int = 0        # plan-carried feature bytes shipped to dev
 
 
 def run_pipelined_epoch(trainer, epoch: int, iters: int,
@@ -189,6 +196,7 @@ def run_pipelined_epoch(trainer, epoch: int, iters: int,
     top_up(minimum=1)
     raw_losses: list = []
     remote = hits = 0
+    t1 = t2 = up = 0
     num_steps = 0
     dispatch_s = 0.0
     window_t: Optional[float] = None
@@ -214,6 +222,11 @@ def run_pipelined_epoch(trainer, epoch: int, iters: int,
         for p in plans:
             remote += p.remote_rows_exact
             hits += p.cache_hit_rows
+            ts = getattr(p, "tier_stats", None)
+            if ts:
+                t1 += ts["tier1_rows"]
+                t2 += ts["tier2_rows"]
+                up += ts["upload_bytes"]
         num_steps = plans[-1].num_steps
         done += k
         since_sync += k
@@ -239,4 +252,5 @@ def run_pipelined_epoch(trainer, epoch: int, iters: int,
                           steady_iter_s=steady, dispatch_s=dispatch_s,
                           traces=engine.trace_count() - tc_start,
                           remote_rows=remote, cache_hit_rows=hits,
-                          num_steps=num_steps)
+                          num_steps=num_steps, tier1_rows=t1, tier2_rows=t2,
+                          upload_bytes=up)

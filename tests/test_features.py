@@ -1,0 +1,304 @@
+"""repro.features: tiered FeatureStore units, spill-to-disk parity, and the
+streamed engine path's bit-identity against the resident baseline."""
+import os
+
+import numpy as np
+import jax
+import pytest
+
+from repro.core import PlanOverflow, plan_iteration, run_iteration
+from repro.features import FeatureStore, spill_shards
+from repro.models.gnn import GNNConfig, init_gnn
+from repro.optim import adam
+from repro.train import ShapeBudget, Trainer
+
+
+def _cfg(d, model="sage"):
+    return GNNConfig(model=model, num_layers=2, hidden_dim=16,
+                     feature_dim=d["ds"].feature_dim,
+                     num_classes=d["ds"].num_classes, fanout=4)
+
+
+def _trainer(d, cfg, table=None, **kw):
+    kw.setdefault("optimizer", adam(5e-3))
+    kw.setdefault("merging", False)
+    kw.setdefault("train_vertices", d["ds"].train_vertices())
+    return Trainer(graph=d["ds"].graph, labels=d["ds"].labels,
+                   part=d["part"], owner=d["owner"],
+                   local_idx=d["local_idx"],
+                   table=d["table"] if table is None else table,
+                   cfg=cfg, **kw)
+
+
+def _tree_equal(a, b):
+    return all(bool((np.asarray(x) == np.asarray(y)).all())
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def _tiered(d, frac=3):
+    return FeatureStore.from_array(
+        d["table"], host_budget_bytes=max(1, d["table"].nbytes // frac))
+
+
+# ---------------------------------------------------------------------------
+# Store units
+# ---------------------------------------------------------------------------
+
+def test_resident_store_reads_match_table(partitioned):
+    d = partitioned
+    st = FeatureStore.from_array(d["table"], owner=d["owner"],
+                                 local_idx=d["local_idx"])
+    assert st.resident and st.hot_rows == st.local_rows
+    assert st.as_dense() is not None
+    rows = np.array([0, 3, 3, 1])
+    assert np.array_equal(st.gather(1, rows), d["table"][1][rows])
+    ids = np.arange(0, d["part"].size, 7)
+    expect = d["table"][d["owner"][ids], d["local_idx"][ids]]
+    assert np.array_equal(st.take_global(ids), expect)
+    assert st.stats.t1_rows > 0 and st.stats.t2_rows == 0
+
+
+def test_tiered_store_hot_sizing_and_miss_path(partitioned):
+    d = partitioned
+    table = d["table"]
+    budget = table.nbytes // 4
+    st = FeatureStore.from_array(table, host_budget_bytes=budget)
+    assert not st.resident
+    assert st.hot_rows == min(st.local_rows,
+                              budget // (st.num_shards * st.row_bytes))
+    with pytest.raises(ValueError):
+        st.as_dense()
+    # cold store: everything is a tier-2 miss
+    rows = np.arange(min(10, st.local_rows))
+    out = st.gather(0, rows)
+    assert np.array_equal(out, table[0][rows])
+    assert st.stats.t2_rows == rows.size and st.stats.t1_rows == 0
+    # promote those rows; re-read is all tier-1, values identical
+    st.readahead(0, rows)
+    assert st.hot_installed_rows(0) == min(rows.size, st.hot_rows)
+    s0 = st.stats.snapshot()
+    out2 = st.gather(0, rows[:st.hot_rows])
+    assert np.array_equal(out2, table[0][rows[:st.hot_rows]])
+    delta = st.stats.delta(s0)
+    assert delta.t2_rows == 0 and delta.t1_rows == rows[:st.hot_rows].size
+
+
+def test_readahead_ranks_by_forecast_counts(partitioned):
+    d = partitioned
+    st = FeatureStore.from_array(
+        d["table"], host_budget_bytes=2 * d["table"].shape[0]
+        * st_row_bytes(d))
+    assert st.hot_rows == 2
+    rows = np.array([4, 1, 9, 6])
+    counts = np.array([1, 5, 2, 9])
+    installed = st.readahead(0, rows, counts=counts)
+    assert installed == 2
+    # highest expected read counts win: rows 6 (9 reads) and 1 (5 reads)
+    hit, _ = st._hot[0].hit_split(np.array([1, 6, 4, 9]))
+    assert hit.tolist() == [True, True, False, False]
+
+
+def st_row_bytes(d):
+    return d["table"].shape[-1] * d["table"].dtype.itemsize
+
+
+# ---------------------------------------------------------------------------
+# Spill to disk (tier 2)
+# ---------------------------------------------------------------------------
+
+def test_spilled_synthetic_dataset_is_bitwise_identical(tmp_path):
+    """The chunked memmap writer draws from the SAME numpy bit stream as the
+    one-shot in-RAM path (Generator fills sequentially), so spilling never
+    changes the dataset."""
+    from repro.graph import make_dataset
+    ram = make_dataset("arxiv", scale=0.01, seed=3)
+    sp = make_dataset("arxiv", scale=0.01, seed=3, spill_dir=str(tmp_path),
+                      feature_budget_bytes=1, spill_chunk_rows=257)
+    assert isinstance(sp.features, np.memmap)
+    assert np.array_equal(np.asarray(sp.features), ram.features)
+    assert np.array_equal(sp.labels, ram.labels)
+    # a covering budget keeps the in-RAM path
+    big = make_dataset("arxiv", scale=0.01, seed=3, spill_dir=str(tmp_path),
+                       feature_budget_bytes=1 << 40)
+    assert not isinstance(big.features, np.memmap)
+
+
+def test_spill_shards_matches_shard_features(partitioned, tmp_path):
+    d = partitioned
+    st = FeatureStore.build(d["ds"].features, d["part"], d["parts"],
+                            directory=str(tmp_path / "shards"),
+                            host_budget_bytes=1, chunk_rows=123)
+    assert st.spilled and not st.resident
+    for s in range(d["parts"]):
+        assert np.array_equal(np.asarray(st._backing[s]), d["table"][s])
+        assert os.path.exists(tmp_path / "shards" / f"shard_{s:03d}.npy")
+    # in-RAM build path lands on the classic table too
+    st2 = FeatureStore.build(d["ds"].features, d["part"], d["parts"])
+    assert np.array_equal(st2.as_dense(), d["table"])
+
+
+# ---------------------------------------------------------------------------
+# Streamed engine path
+# ---------------------------------------------------------------------------
+
+def _plan_kwargs(d, roots, **kw):
+    out = dict(graph=d["ds"].graph, labels=d["ds"].labels, part=d["part"],
+               owner=d["owner"], local_idx=d["local_idx"],
+               local_rows=d["table"].shape[1], roots_per_model=roots,
+               num_layers=2, fanout=4, strategy="hopgnn", sample_seed=7)
+    out.update(kw)
+    return out
+
+
+def test_streamed_iteration_bitwise_matches_resident(partitioned, rng):
+    """Same feature values per tree position ⇒ same grads/loss, whether the
+    engine reads a resident device table or plan-carried feature blocks."""
+    d = partitioned
+    cfg = _cfg(d)
+    params = init_gnn(jax.random.PRNGKey(0), cfg)
+    roots = [rng.choice(d["ds"].train_vertices(), 8, replace=False)
+             for _ in range(d["parts"])]
+    plan_r = plan_iteration(**_plan_kwargs(d, roots))
+    grads_r, loss_r = run_iteration(params, d["table"], plan_r, cfg)
+    store = _tiered(d)
+    plan_s = plan_iteration(**_plan_kwargs(d, roots), feature_store=store)
+    assert plan_s.streamed and plan_s.l_max > 0
+    assert plan_s.feat_local.shape == (d["parts"], plan_s.l_max,
+                                       d["ds"].feature_dim)
+    assert plan_s.tier_stats["tier2_rows"] > 0    # cold hot tier
+    grads_s, loss_s = run_iteration(params, None, plan_s, cfg)
+    assert float(loss_r) == float(loss_s)
+    assert _tree_equal(grads_r, grads_s)
+
+
+def test_streamed_plan_requires_pregather(partitioned):
+    d = partitioned
+    store = _tiered(d)
+    roots = [np.arange(4) for _ in range(d["parts"])]
+    with pytest.raises(ValueError, match="pregather"):
+        plan_iteration(**_plan_kwargs(d, roots), feature_store=store,
+                       pregather=False)
+
+
+def test_non_streamed_plan_rejects_missing_table(partitioned, rng):
+    d = partitioned
+    cfg = _cfg(d)
+    params = init_gnn(jax.random.PRNGKey(0), cfg)
+    roots = [rng.choice(d["ds"].train_vertices(), 4, replace=False)
+             for _ in range(d["parts"])]
+    plan = plan_iteration(**_plan_kwargs(d, roots))
+    with pytest.raises(ValueError, match="streamed"):
+        run_iteration(params, None, plan, cfg)
+
+
+def test_l_max_overflow_signals_and_budget_rebuckets(partitioned, rng):
+    d = partitioned
+    store = _tiered(d)
+    roots = [rng.choice(d["ds"].train_vertices(), 8, replace=False)
+             for _ in range(d["parts"])]
+    with pytest.raises(PlanOverflow) as ei:
+        plan_iteration(**_plan_kwargs(d, roots), feature_store=store,
+                       l_max=1)
+    assert ei.value.field == "l_max" and ei.value.needed > 1
+    # the budget absorbs the overflow: one retryable grow, pow2 bucket
+    b = ShapeBudget()
+    plan = b.plan(**_plan_kwargs(d, roots), feature_store=store)
+    assert plan.streamed
+    key = len(roots)
+    assert b.l_buckets[key] >= plan.l_max
+    assert b.l_buckets[key] & (b.l_buckets[key] - 1) == 0
+    assert b.bucket_shapes(key)[3] == b.l_buckets[key]
+
+
+# ---------------------------------------------------------------------------
+# Trainer integration (the correctness gates)
+# ---------------------------------------------------------------------------
+
+_RESIDENT_CONFIGS = [
+    ("pregather", dict()),
+    ("per_step", dict(pregather=False)),
+    ("per_step_folded", dict(pregather=False, fold_returns=True)),
+    ("cache_on", dict(cache_policy="degree", cache_budget_bytes=1 << 14)),
+]
+
+
+@pytest.mark.parametrize("name,kw", _RESIDENT_CONFIGS,
+                         ids=[n for n, _ in _RESIDENT_CONFIGS])
+def test_resident_store_trainer_bitwise_matches_raw_array(partitioned,
+                                                          name, kw):
+    """Back-compat gate: an all-resident FeatureStore IS the old feature
+    path — params and losses bit-identical to handing Trainer the raw
+    (N, rows, d) array, across engine modes."""
+    d = partitioned
+    cfg = _cfg(d)
+    tr_a = _trainer(d, cfg, **kw)
+    st_a = tr_a.fit(epochs=2, iters_per_epoch=3, batch_per_model=8)
+    tr_s = _trainer(d, cfg, table=FeatureStore.from_array(d["table"]), **kw)
+    st_s = tr_s.fit(epochs=2, iters_per_epoch=3, batch_per_model=8)
+    assert not tr_s.streamed
+    assert _tree_equal(tr_a.params, tr_s.params)
+    assert [s.loss for s in st_a] == [s.loss for s in st_s]
+
+
+@pytest.mark.parametrize("name,kw", [
+    ("plain", dict()),
+    ("cache_on", dict(cache_policy="degree", cache_budget_bytes=1 << 14)),
+    ("stacked", dict(pipeline_stack=2)),
+], ids=["plain", "cache_on", "stacked"])
+def test_streamed_trainer_bitwise_matches_resident(partitioned, name, kw):
+    """Out-of-core gate: a tiered store (streamed engine, readahead on the
+    cache thread) trains bit-identically to the resident baseline."""
+    d = partitioned
+    cfg = _cfg(d)
+    tr_r = _trainer(d, cfg, **kw)
+    st_r = tr_r.fit(epochs=2, iters_per_epoch=3, batch_per_model=8)
+    tr_t = _trainer(d, cfg, table=_tiered(d), **kw)
+    assert tr_t.streamed and tr_t.table is None
+    st_t = tr_t.fit(epochs=2, iters_per_epoch=3, batch_per_model=8)
+    assert _tree_equal(tr_r.params, tr_t.params)
+    assert [s.loss for s in st_r] == [s.loss for s in st_t]
+    assert all(s.streamed for s in st_t) and not any(
+        s.streamed for s in st_r)
+    # tier accounting flows: gathers happened, readahead warmed tier 1
+    assert st_t[0].tier1_rows + st_t[0].tier2_rows > 0
+    assert st_t[1].tier1_rows > 0 and st_t[0].upload_bytes > 0
+
+
+def test_streamed_trainer_rejects_per_step(partitioned):
+    d = partitioned
+    with pytest.raises(ValueError, match="pregather"):
+        _trainer(d, _cfg(d), table=_tiered(d), pregather=False)
+
+
+def test_streamed_trainer_on_disk_shards(partitioned, tmp_path):
+    """End-to-end out-of-core: features only on disk (mmap tier 2), host
+    hot tier under budget — losses match the resident baseline."""
+    d = partitioned
+    cfg = _cfg(d)
+    st = FeatureStore.build(d["ds"].features, d["part"], d["parts"],
+                            directory=str(tmp_path),
+                            host_budget_bytes=d["table"].nbytes // 4)
+    tr = _trainer(d, cfg, table=st)
+    stats = tr.fit(epochs=2, iters_per_epoch=3, batch_per_model=8)
+    tr_r = _trainer(d, cfg)
+    stats_r = tr_r.fit(epochs=2, iters_per_epoch=3, batch_per_model=8)
+    assert [s.loss for s in stats] == [s.loss for s in stats_r]
+    assert _tree_equal(tr.params, tr_r.params)
+
+
+def test_cache_refreshes_through_store_tiers(partitioned):
+    """CacheStore.install_from resolves rows via the tier chain — the
+    installed values must equal the raw table rows regardless of tier."""
+    from repro.cache import CacheStore
+    d = partitioned
+    store = _tiered(d).bind(d["owner"], d["local_idx"])
+    cs = CacheStore(d["parts"], d["ds"].feature_dim, c_max=8,
+                    dtype=d["table"].dtype)
+    sel = [np.sort(np.random.default_rng(s).choice(
+        d["part"].size, 5, replace=False).astype(np.int64))
+        for s in range(d["parts"])]
+    cs.install_from(store, sel)
+    for s in range(d["parts"]):
+        expect = d["table"][d["owner"][sel[s]], d["local_idx"][sel[s]]]
+        got = cs._host[s, :5]
+        assert np.array_equal(got, expect)

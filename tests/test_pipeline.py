@@ -295,3 +295,35 @@ def test_stacked_dispatch_falls_back_on_shape_split(partitioned):
     assert isinstance(losses, list) and len(losses) == 2
     assert tr.global_step == step0 + 2            # both plans executed
     assert all(np.isfinite(float(l)) for l in losses)
+
+
+def test_midflight_overflow_rebuckets_without_upload_violation(partitioned):
+    """A batch-size spike mid-epoch overflows batch_pad while the pipelined
+    uploader has committed plans in flight: the budget re-buckets, the
+    uploader accepts the new bucket as the expected signature (zero
+    stability violations), exactly one extra retrace happens, and the run
+    stays bit-identical to the synchronous fused loop."""
+    engine.clear_compile_cache()
+    d = partitioned
+    cfg = _cfg(d)
+    tv = d["ds"].train_vertices()
+
+    def spiky_roots(epoch, it):
+        rng = np.random.default_rng((11, epoch, it))
+        # iterations 0-2 fit the seeded bucket; iteration 3 quadruples the
+        # batch, overflowing batch_pad (which carries no probe headroom)
+        n = 8 if (epoch, it) < (0, 3) else 36
+        return [rng.choice(tv, n, replace=False) for _ in range(d["parts"])]
+
+    tr_p = _trainer(d, cfg, pipeline=True, root_fn=spiky_roots)
+    st_p = tr_p.fit(epochs=2, iters_per_epoch=5, batch_per_model=8)
+    assert tr_p.budget.rebuckets >= 1
+    assert tr_p._uploader.shape_changes == 0      # re-bucket, not drift
+    assert tr_p._uploader.uploads == 10
+    # after the overflow epoch, shapes are settled again: no new traces
+    assert st_p[1].traces == 0
+
+    tr_s = _trainer(d, cfg, pipeline=False, fused=True, root_fn=spiky_roots)
+    st_s = tr_s.fit(epochs=2, iters_per_epoch=5, batch_per_model=8)
+    assert _tree_equal(tr_p.params, tr_s.params)
+    assert [s.loss for s in st_p] == [s.loss for s in st_s]

@@ -240,3 +240,59 @@ def test_trainer_eval_uses_sharded_table(partitioned):
     tr = _trainer(d, _cfg(d))
     acc = tr.evaluate(n_eval=64)
     assert 0.0 <= acc <= 1.0
+
+
+def test_budget_state_roundtrip_restores_buckets(partitioned, rng):
+    """state_dict()/load_state(): every learned bucket (incl. per-pattern
+    l_buckets, global c_max, and the headroom knobs) survives a JSON
+    round-trip with integer pattern keys intact."""
+    import json
+    from repro.features import FeatureStore
+    d = partitioned
+    store = FeatureStore.from_array(
+        d["table"], host_budget_bytes=d["table"].nbytes // 3)
+    b = ShapeBudget(r_max_headroom=1.75)
+    roots = [rng.choice(d["ds"].train_vertices(), 8, replace=False)
+             for _ in range(d["parts"])]
+    b.plan(**_plan_kwargs(d, roots, pregather=True), feature_store=store)
+    b.grow("c_max", 5)
+    state = json.loads(json.dumps(b.state_dict()))
+    b2 = ShapeBudget()
+    b2.load_state(state)
+    assert b2.buckets == b.buckets
+    assert b2.l_buckets == b.l_buckets
+    assert list(b2.buckets) == [len(roots)]          # int key survived JSON
+    assert (b2.c_max, b2.batch_pad, b2.r_max, b2.l_max) == \
+        (b.c_max, b.batch_pad, b.r_max, b.l_max)
+    assert b2.r_max_headroom == 1.75
+    # a restored budget plans straight into the old bucket: no probe, and
+    # no NEW re-buckets (the counter itself is restored — it's cumulative)
+    rb0 = b2.rebuckets
+    plan = b2.plan(**_plan_kwargs(d, roots, pregather=True),
+                   feature_store=store)
+    assert b2.probes == 0 and b2.rebuckets == rb0
+    assert (plan.batch_pad, plan.r_max) == (b.batch_pad, b.r_max)
+
+
+def test_resume_restores_budget_no_first_epoch_retrace(partitioned,
+                                                       tmp_path):
+    """Regression: a resumed run used to re-probe and re-trace its first
+    epoch because bucket state died with the process. With budget_state in
+    the checkpoint extra, the resumed Trainer plans into the original
+    buckets and (compile cache permitting) runs zero traces."""
+    d = partitioned
+    cfg = _cfg(d)
+    ck = str(tmp_path / "ck")
+    tr1 = _trainer(d, cfg, ckpt_dir=ck, root_seed=5)
+    tr1.fit(epochs=2, iters_per_epoch=2, batch_per_model=8)
+
+    tr2 = _trainer(d, cfg, ckpt_dir=ck, root_seed=5)
+    tc0 = engine.trace_count()
+    stats = tr2.fit(epochs=3, iters_per_epoch=2, batch_per_model=8,
+                    resume=True)
+    assert tr2.budget.buckets == tr1.budget.buckets
+    assert tr2.budget.c_max == tr1.budget.c_max
+    assert tr2.budget.probes == 0                 # bucket known, no probe
+    # same shapes + process-global compile cache ⇒ nothing retraces
+    assert engine.trace_count() == tc0
+    assert stats[0].traces == 0
