@@ -3,8 +3,8 @@
 PYTHON ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test test-all bench-smoke bench-plan bench-cache bench-pipeline \
-        bench-features train-smoke
+.PHONY: test test-all test-chaos bench-smoke bench-plan bench-cache \
+        bench-pipeline bench-features bench-resilience train-smoke
 
 # Fast lane (tier-1): everything except @pytest.mark.slow (pyproject default)
 test:
@@ -13,6 +13,12 @@ test:
 # Full suite including the slow multi-device integration tests
 test-all:
 	$(PYTHON) -m pytest -q -m ""
+
+# Tier-1 fast lane under transient-only background chaos (deterministic
+# low-rate comm delays, guarded drops, planner stalls — repro.resilience).
+# Every tier-1 assertion must hold unchanged; see tests/conftest.py.
+test-chaos:
+	REPRO_CHAOS_SEED=7 $(PYTHON) -m pytest -x -q
 
 # Quick pass over every benchmark suite (ratios, 1-CPU-core scales)
 bench-smoke:
@@ -41,6 +47,12 @@ bench-pipeline:
 # (writes BENCH_features.json at the repo root)
 bench-features:
 	$(PYTHON) -m benchmarks.features
+
+# Resilience A/B: always-on policy plumbing overhead vs policy-off, and
+# recovery under the headline recoverable FaultPlan on the streamed stack
+# (bit-parity + ≤1.15x steady overhead; writes BENCH_resilience.json)
+bench-resilience:
+	$(PYTHON) -m benchmarks.resilience
 
 # 3-epoch compile-once smoke train (prints first vs steady epoch times)
 train-smoke:

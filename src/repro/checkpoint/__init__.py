@@ -1,4 +1,8 @@
-"""Iteration-level checkpointing (paper §8 'Failure recovery')."""
-from repro.checkpoint.store import save_checkpoint, load_checkpoint, latest_step
+"""Iteration-level checkpointing (paper §8 'Failure recovery') —
+crash-atomic writes, truncated-checkpoint fallback on resume."""
+from repro.checkpoint.store import (CheckpointCorrupt, latest_step,
+                                    load_checkpoint, save_checkpoint,
+                                    valid_steps)
 
-__all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_step",
+           "valid_steps", "CheckpointCorrupt"]

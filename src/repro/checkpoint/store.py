@@ -1,4 +1,4 @@
-"""Iteration-level checkpointing (paper §8).
+"""Iteration-level checkpointing (paper §8) — crash-atomic.
 
 LeapGNN's models visit several servers per iteration; the paper's insight is
 that checkpointing at *iteration* boundaries (after gradients are applied
@@ -7,17 +7,36 @@ parameters) — no in-flight time-step state. We implement exactly that:
 an ``npz`` of flattened pytree leaves plus a JSON manifest, atomic rename,
 and a ``latest`` pointer. Works for both the GNN side and the LLM stack
 (any pytree of arrays).
+
+Durability contract (repro.resilience): every file lands via
+``temp file → flush → fsync → os.replace`` and the directory entry is
+fsynced after, so a SIGKILL / power cut at ANY instant leaves either the
+complete new checkpoint or the complete previous one — never a torn file
+under a final name. Older checkpoints are pruned only *after* the new one
+(npz + manifest + ``latest``) is durable. On resume,
+:func:`load_checkpoint` with ``step=None`` validates candidates newest-
+first and falls back past a truncated/corrupt one with a warning instead
+of training on garbage (an explicitly requested ``step`` still fails
+loudly — the caller asked for that exact state).
 """
 from __future__ import annotations
 
 import json
 import os
 import tempfile
+import warnings
+import zipfile
+import zlib
 from pathlib import Path
 from typing import Any, Optional
 
 import jax
 import numpy as np
+
+
+class CheckpointCorrupt(RuntimeError):
+    """A checkpoint's files exist but cannot be decoded (truncated write,
+    bit rot, missing manifest) — resume should fall back, not crash."""
 
 
 def _flatten(tree: Any):
@@ -58,9 +77,39 @@ def _json_safe(obj):
     raise TypeError(f"not JSON-serializable: {type(obj)!r}")
 
 
+def _fsync_dir(directory: Path) -> None:
+    """Make renamed directory entries durable (no-op where unsupported)."""
+    try:
+        fd = os.open(directory, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
+def _atomic_write(directory: Path, final: Path, payload) -> None:
+    """temp file → flush → fsync → os.replace under ``final``'s directory.
+    ``payload(f)`` writes to the open binary file object."""
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            payload(f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, final)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
 def save_checkpoint(directory: str | Path, step: int, tree: Any,
                     extra: Optional[dict] = None, keep: int = 3) -> Path:
-    """Atomically write ``step-<step>.npz`` + manifest; prune old ones."""
+    """Crash-atomically write ``step-<step>.npz`` + manifest; prune old
+    ones only once the new checkpoint is fully durable."""
     directory = Path(directory)
     directory.mkdir(parents=True, exist_ok=True)
     leaves, treedef = _flatten(tree)
@@ -74,19 +123,17 @@ def save_checkpoint(directory: str | Path, step: int, tree: Any,
                 "extra": extra or {}}
 
     final = directory / f"step-{step:08d}.npz"
-    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp.npz")
-    os.close(fd)
-    try:
-        with open(tmp, "wb") as f:
-            np.savez(f, **arrays)
-        os.replace(tmp, final)
-    finally:
-        if os.path.exists(tmp):
-            os.unlink(tmp)
-    (directory / f"step-{step:08d}.json").write_text(
-        json.dumps(manifest, default=_json_safe))
-    (directory / "latest").write_text(str(step))
+    _atomic_write(directory, final, lambda f: np.savez(f, **arrays))
+    # manifest second: a crash between the two leaves an npz without a
+    # manifest, which valid_steps/load treat as incomplete and skip
+    blob = json.dumps(manifest, default=_json_safe).encode()
+    _atomic_write(directory, directory / f"step-{step:08d}.json",
+                  lambda f: f.write(blob))
+    _atomic_write(directory, directory / "latest",
+                  lambda f: f.write(str(step).encode()))
+    _fsync_dir(directory)
 
+    # previous checkpoints survive until here — the new one is durable now
     for old in sorted(directory.glob("step-*.npz"))[:-keep]:
         old.unlink(missing_ok=True)
         old.with_suffix(".json").unlink(missing_ok=True)
@@ -100,23 +147,83 @@ def latest_step(directory: str | Path) -> Optional[int]:
     return int(p.read_text().strip())
 
 
-def load_checkpoint(directory: str | Path, tree_like: Any,
-                    step: Optional[int] = None) -> tuple[Any, int, dict]:
-    """Restore into the structure of ``tree_like`` (shape/dtype template).
-    Returns (tree, step, extra)."""
+def valid_steps(directory: str | Path) -> list[int]:
+    """Steps whose npz AND manifest both exist, ascending (completeness by
+    presence only — decode errors are caught at load time)."""
     directory = Path(directory)
-    if step is None:
-        step = latest_step(directory)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoint in {directory}")
-    data = np.load(directory / f"step-{step:08d}.npz")
-    manifest = json.loads((directory / f"step-{step:08d}.json").read_text())
+    out = []
+    for p in sorted(directory.glob("step-*.npz")):
+        try:
+            step = int(p.stem.split("-")[1])
+        except (IndexError, ValueError):
+            continue
+        if p.with_suffix(".json").exists():
+            out.append(step)
+    return out
+
+
+def _load_step(directory: Path, step: int, tree_like: Any
+               ) -> tuple[Any, int, dict]:
+    """Decode one checkpoint. Raises CheckpointCorrupt for anything that
+    smells like a torn/rotten file; a template/leaf-count mismatch is a
+    caller-contract ValueError and propagates as such (falling back to an
+    older checkpoint would silently resume the wrong run)."""
+    npz_path = directory / f"step-{step:08d}.npz"
+    man_path = directory / f"step-{step:08d}.json"
+    try:
+        manifest = json.loads(man_path.read_text())
+        data = np.load(npz_path)
+    except FileNotFoundError:
+        raise
+    except (json.JSONDecodeError, zipfile.BadZipFile, OSError,
+            ValueError) as e:
+        raise CheckpointCorrupt(f"step {step}: unreadable ({e})") from e
     leaves, treedef = _flatten(tree_like)
     if len(leaves) != manifest["num_leaves"]:
         raise ValueError(
             f"leaf count mismatch: template {len(leaves)} vs "
             f"checkpoint {manifest['num_leaves']}")
-    restored = [_decode(data[f"leaf_{i}"], manifest["dtypes"][i])
-                for i in range(len(leaves))]
+    try:
+        restored = [_decode(data[f"leaf_{i}"], manifest["dtypes"][i])
+                    for i in range(len(leaves))]
+    except (KeyError, zipfile.BadZipFile, zlib.error, OSError,
+            ValueError, EOFError) as e:
+        # npz members decompress lazily — truncation surfaces here
+        raise CheckpointCorrupt(f"step {step}: truncated ({e})") from e
     tree = jax.tree.unflatten(treedef, restored)
     return tree, step, manifest["extra"]
+
+
+def load_checkpoint(directory: str | Path, tree_like: Any,
+                    step: Optional[int] = None) -> tuple[Any, int, dict]:
+    """Restore into the structure of ``tree_like`` (shape/dtype template).
+    Returns (tree, step, extra).
+
+    With ``step=None`` candidates are tried newest-first: a truncated or
+    otherwise corrupt checkpoint (e.g. the process was SIGKILLed mid-write
+    on a filesystem that reordered the rename) is skipped with a warning
+    and the previous durable one is restored. An explicit ``step`` fails
+    loudly instead — the caller asked for that exact state."""
+    directory = Path(directory)
+    if step is not None:
+        return _load_step(directory, step, tree_like)
+    candidates = valid_steps(directory)
+    latest = latest_step(directory)
+    if latest is not None and latest not in candidates:
+        # a 'latest' pointing at an incomplete pair is itself a crash
+        # artifact; try the files that exist
+        warnings.warn(f"checkpoint 'latest'={latest} is incomplete in "
+                      f"{directory}; falling back", RuntimeWarning)
+    if not candidates:
+        raise FileNotFoundError(f"no checkpoint in {directory}")
+    last_err: Optional[Exception] = None
+    for cand in reversed(candidates):
+        try:
+            return _load_step(directory, cand, tree_like)
+        except CheckpointCorrupt as e:
+            warnings.warn(
+                f"skipping corrupt checkpoint step {cand} in {directory} "
+                f"({e}); falling back to the previous one", RuntimeWarning)
+            last_err = e
+    raise CheckpointCorrupt(
+        f"every checkpoint in {directory} is corrupt") from last_err

@@ -416,6 +416,30 @@ def _as_device(x):
     return x if isinstance(x, jax.Array) else jnp.asarray(x)
 
 
+# Host comm boundary hook (repro.resilience). In a multi-host deployment
+# each all_to_all is an RPC fan-out that can stall or drop; in this harness
+# the host-side point where an iteration's exchanges are initiated is the
+# dispatch that stages their arguments. A fault/robustness layer installs a
+# callable here; it runs BEFORE any compiled program is invoked (and thus
+# before any params/opt_state buffer donation), so a raise from the hook is
+# always safe to retry. None (the default) costs one global read.
+_COMM_FAULT_HOOK: Optional[Callable] = None
+
+
+def set_comm_fault_hook(hook: Optional[Callable]) -> None:
+    """Install/remove the host comm-boundary hook (``hook(plan)``)."""
+    global _COMM_FAULT_HOOK
+    _COMM_FAULT_HOOK = hook
+
+
+def comm_fault_point(plan) -> None:
+    """Run the comm-boundary hook for one iteration dispatch (pre-donation).
+    Called by :func:`prepare_iteration_args` and the stacked dispatch."""
+    hook = _COMM_FAULT_HOOK
+    if hook is not None:
+        hook(plan)
+
+
 # (num_shards, feature_dim, dtype) -> (N, 0, d) device zeros. Cache-off
 # iterations all share one zero-width cache table instead of allocating a
 # fresh one per call (part of the per-iteration host overhead PR 5 removes).
@@ -444,6 +468,7 @@ def prepare_iteration_args(table_global, plan, cache=None):
     Streamed plans (repro.features): no resident table exists —
     ``table_global=None`` is replaced by the shared zero-width placeholder
     (the plan's feature blocks ride in ``dev``)."""
+    comm_fault_point(plan)
     if table_global is None:
         if not getattr(plan, "streamed", False):
             raise ValueError("table_global=None is only valid for streamed "

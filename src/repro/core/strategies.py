@@ -118,6 +118,12 @@ class IterationPlan:
     tier_stats: Optional[dict] = None    # per-tier rows/bytes this plan's
     #                                      host gathers resolved through
 
+    # --- provenance (repro.resilience; None outside the Trainer) ---
+    epoch_it: Optional[tuple] = None     # (epoch, it) this plan was built
+    #                                      for — attached by build_plan so
+    #                                      background failures and comm
+    #                                      faults carry their origin
+
     def miss_rate(self) -> float:
         """Remote fraction of unique feature rows (paper Fig. 14)."""
         return self.remote_rows_exact / max(self.unique_rows, 1)

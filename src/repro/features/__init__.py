@@ -1,5 +1,7 @@
 """repro.features — tiered feature storage (device cache → host hot tier →
 mmap disk). See store.py for the tier contract."""
-from repro.features.store import FeatureStore, TierStats, spill_shards
+from repro.features.store import (CorruptFeatureError, FeatureStore,
+                                  TierStats, spill_shards)
 
-__all__ = ["FeatureStore", "TierStats", "spill_shards"]
+__all__ = ["FeatureStore", "TierStats", "spill_shards",
+           "CorruptFeatureError"]

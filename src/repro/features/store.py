@@ -33,15 +33,38 @@ Thread contract: :meth:`gather`/:meth:`take_global` may be called
 concurrently from the Trainer's plan-prefetch thread and its cache thread
 (counters are lock-protected); :meth:`readahead` installs only at epoch
 boundaries, when no plan is in flight, so hot-tier swaps never race reads.
+
+Integrity (repro.resilience): the disk tier can rot — a flipped bit in a
+mmap row would otherwise train silently on garbage. With checksums enabled
+(:meth:`enable_checksums`; on by default for spilled stores built via
+:meth:`build`), every backing shard carries a per-chunk crc32 computed at
+spill time. Reads off the backing tier (gather misses, readahead
+promotion) verify the chunks they touch — memoized, so each chunk pays the
+scan once until marked suspect — and a mismatch *quarantines* the chunk:
+its rows are re-gathered from the authoritative source feature array
+(:meth:`attach_source`), held as an in-RAM patch that shadows the rotten
+disk region, and counted in :class:`TierStats`. No source attached means
+the corruption is unrecoverable and reads raise
+:class:`CorruptFeatureError` instead of returning garbage.
 """
 from __future__ import annotations
 
 import dataclasses
 import threading
+import zlib
 from pathlib import Path
 from typing import Optional, Sequence
 
 import numpy as np
+
+
+class CorruptFeatureError(RuntimeError):
+    """Backing-tier checksum mismatch with no authoritative source to
+    repair from (or a source that itself disagrees with the checksum)."""
+
+    def __init__(self, msg: str):
+        super().__init__(msg)
+        self.site = "store"      # degradation-ladder routing key
 
 
 @dataclasses.dataclass
@@ -58,6 +81,12 @@ class TierStats:
     t2_rows: int = 0
     readahead_rows: int = 0
     gathers: int = 0
+    # integrity counters (repro.resilience) — deliberately NOT part of
+    # snapshot()/delta(), which are positional and consumed by the
+    # streamed-engine byte accounting
+    crc_checked_chunks: int = 0
+    crc_failures: int = 0
+    repaired_rows: int = 0
 
     def snapshot(self) -> tuple:
         return (self.t1_rows, self.t2_rows, self.readahead_rows, self.gathers)
@@ -138,6 +167,15 @@ class FeatureStore:
         self.stats = TierStats()
         self._lock = threading.Lock()
         self._dense: Optional[np.ndarray] = None
+        # --- integrity state (enable_checksums) ---
+        self.crc_chunk_rows = 0
+        self._crc: Optional[list[np.ndarray]] = None   # per-shard chunk crcs
+        self._verified: list[set] = [set() for _ in range(self.num_shards)]
+        self._patches: list[dict] = [{} for _ in range(self.num_shards)]
+        self._source: Optional[np.ndarray] = None      # global feature rows
+        self._shard_globals_cache: dict[int, np.ndarray] = {}
+        self._crc_lock = threading.RLock()
+        self._hot_bypass = False
         # residency: non-positive budget = unlimited host RAM = the
         # pre-refactor world (dense table, no hot tier, no streaming)
         self.resident = self.host_budget_bytes <= 0
@@ -175,7 +213,9 @@ class FeatureStore:
     @classmethod
     def build(cls, features: np.ndarray, part: np.ndarray, num_shards: int,
               directory: Optional[str] = None, host_budget_bytes: int = 0,
-              chunk_rows: int = 1 << 16) -> "FeatureStore":
+              chunk_rows: int = 1 << 16,
+              checksums: Optional[bool] = None,
+              crc_chunk_rows: int = 1024) -> "FeatureStore":
         """Shard ``features`` by ``part`` into a store.
 
         With ``directory`` the per-shard rows are scattered *chunked* into
@@ -183,7 +223,12 @@ class FeatureStore:
         is one chunk, so graphs larger than host RAM shard fine as long as
         ``features`` itself is a memmap (repro.graph.synthetic's spill
         writer). Without it the shards live in RAM (the classic
-        ``shard_features`` layout)."""
+        ``shard_features`` layout).
+
+        ``checksums`` defaults to on for spilled (disk-tier) stores and off
+        for in-RAM ones; the crcs are persisted as ``shard_*.crc32.npz``
+        sidecars next to the shard files, and ``features`` is attached as
+        the authoritative repair source."""
         from repro.graph.partition import local_index_map
         owner, local_idx, max_sz = local_index_map(
             np.asarray(part), num_shards)
@@ -191,12 +236,20 @@ class FeatureStore:
             table = np.zeros((num_shards, max_sz, features.shape[1]),
                              features.dtype)
             table[owner, local_idx] = features
-            return cls.from_array(table, host_budget_bytes=host_budget_bytes,
-                                  owner=owner, local_idx=local_idx)
+            st = cls.from_array(table, host_budget_bytes=host_budget_bytes,
+                                owner=owner, local_idx=local_idx)
+            if checksums:
+                st.attach_source(features)
+                st.enable_checksums(crc_chunk_rows)
+            return st
         backing = spill_shards(features, owner, local_idx, num_shards,
                                max_sz, directory, chunk_rows=chunk_rows)
-        return cls(backing, host_budget_bytes=host_budget_bytes,
-                   owner=owner, local_idx=local_idx)
+        st = cls(backing, host_budget_bytes=host_budget_bytes,
+                 owner=owner, local_idx=local_idx)
+        if checksums is None or checksums:
+            st.attach_source(features)
+            st.enable_checksums(crc_chunk_rows, persist_dir=directory)
+        return st
 
     def bind(self, owner: np.ndarray, local_idx: np.ndarray) -> "FeatureStore":
         """Attach the global-id → (owner, local row) maps
@@ -238,7 +291,15 @@ class FeatureStore:
                 f"{self.host_budget_bytes}); the dense table would exceed "
                 "the host budget — use gather()/take_global()")
         if self._dense is None:
-            self._dense = np.stack([np.asarray(b) for b in self._backing])
+            if self._crc is not None:
+                # verified materialization — corruption must not leak into
+                # the device table a resident run uploads once
+                full = np.arange(self.local_rows, dtype=np.int64)
+                self._dense = np.stack([self._read_backing(s, full)
+                                        for s in range(self.num_shards)])
+            else:
+                self._dense = np.stack([np.asarray(b)
+                                        for b in self._backing])
         return self._dense
 
     # ------------------------------------------------------------------
@@ -254,9 +315,15 @@ class FeatureStore:
         if rows_idx.size == 0:
             return out
         if self._hot is None:                      # resident: all host RAM
-            out[:] = self._backing[shard][rows_idx]
+            out[:] = self._read_backing(shard, rows_idx)
             with self._lock:
                 self.stats.t1_rows += int(rows_idx.size)
+                self.stats.gathers += 1
+            return out
+        if self._hot_bypass:                       # degraded: tier 2 only
+            out[:] = self._read_backing(shard, rows_idx)
+            with self._lock:
+                self.stats.t2_rows += int(rows_idx.size)
                 self.stats.gathers += 1
             return out
         hot = self._hot[shard]
@@ -266,7 +333,7 @@ class FeatureStore:
             out[hit] = hot.buf[pos[hit]]
         if n_hit < rows_idx.size:
             miss = ~hit
-            out[miss] = self._backing[shard][rows_idx[miss]]
+            out[miss] = self._read_backing(shard, rows_idx[miss])
         with self._lock:
             self.stats.t1_rows += n_hit
             self.stats.t2_rows += int(rows_idx.size) - n_hit
@@ -324,11 +391,236 @@ class FeatureStore:
             rows_idx = np.unique(rows_idx)[:self.hot_rows]
         rows = np.empty((rows_idx.size, self.feature_dim), self.dtype)
         if rows_idx.size:
-            rows[:] = self._backing[shard][rows_idx]
+            rows[:] = self._read_backing(shard, rows_idx)
         self._hot[shard].install(rows_idx, rows)
         with self._lock:
             self.stats.readahead_rows += int(rows_idx.size)
         return int(rows_idx.size)
+
+    # ------------------------------------------------------------------
+    # Integrity: per-chunk crc32, quarantine, repair (repro.resilience)
+    # ------------------------------------------------------------------
+
+    def enable_checksums(self, chunk_rows: int = 1024,
+                         persist_dir: Optional[str] = None) -> None:
+        """Compute (or load) per-chunk crc32s over every backing shard.
+
+        A *chunk* is ``chunk_rows`` consecutive backing rows; the crc
+        covers the chunk's raw bytes including padding rows, so repair can
+        re-derive and re-verify it from the source exactly. With
+        ``persist_dir``, crcs are written as ``shard_*.crc32.npz``
+        sidecars (and loaded from them when present and chunk-compatible
+        — reopening a spilled directory skips the rescan)."""
+        self.crc_chunk_rows = int(chunk_rows)
+        n_chunks = -(-self.local_rows // self.crc_chunk_rows)
+        if persist_dir is not None and self._load_sidecars(persist_dir):
+            return
+        crcs = []
+        for s in range(self.num_shards):
+            c = np.empty(n_chunks, np.uint32)
+            for k in range(n_chunks):
+                c[k] = self._chunk_crc(s, k)
+            crcs.append(c)
+        self._crc = crcs
+        self._verified = [set() for _ in range(self.num_shards)]
+        if persist_dir is not None:
+            self._write_sidecars(persist_dir)
+
+    def _sidecar_path(self, directory, shard: int) -> Path:
+        return Path(directory) / f"shard_{shard:03d}.crc32.npz"
+
+    def _write_sidecars(self, directory) -> None:
+        assert self._crc is not None
+        for s in range(self.num_shards):
+            np.savez(self._sidecar_path(directory, s), crc=self._crc[s],
+                     chunk_rows=np.int64(self.crc_chunk_rows))
+
+    def _load_sidecars(self, directory) -> bool:
+        n_chunks = -(-self.local_rows // self.crc_chunk_rows)
+        crcs = []
+        for s in range(self.num_shards):
+            p = self._sidecar_path(directory, s)
+            if not p.exists():
+                return False
+            with np.load(p) as z:
+                if int(z["chunk_rows"]) != self.crc_chunk_rows or \
+                        z["crc"].size != n_chunks:
+                    return False
+                crcs.append(z["crc"].astype(np.uint32))
+        self._crc = crcs
+        self._verified = [set() for _ in range(self.num_shards)]
+        return True
+
+    def attach_source(self, features: np.ndarray) -> "FeatureStore":
+        """Attach the authoritative global ``(n, d)`` feature rows (the
+        pre-shard array or its memmap) as the repair source for
+        checksum-failed chunks. Needs bound owner/local_idx maps to invert
+        shard-local rows back to global ids. Returns self for chaining."""
+        self._source = features
+        return self
+
+    @property
+    def checksums_enabled(self) -> bool:
+        return self._crc is not None
+
+    @property
+    def hot_bypass(self) -> bool:
+        return self._hot_bypass
+
+    def bypass_hot(self, flag: bool = True) -> None:
+        """Degradation-ladder switch: route every gather straight to the
+        (checksum-verified) backing tier, ignoring the hot tier. Used when
+        a suspect hot-tier install must not serve reads; readahead still
+        installs, so clearing the flag restores tiered service."""
+        self._hot_bypass = bool(flag)
+
+    def mark_suspect(self, shard: int,
+                     rows_idx: Optional[np.ndarray] = None) -> None:
+        """Drop verification memos for the chunks covering ``rows_idx``
+        (whole shard when None) — the next read re-verifies them. This is
+        the hook a scrubber or an EIO handler calls when it no longer
+        trusts previously-verified disk regions."""
+        with self._crc_lock:
+            if self._crc is not None:
+                self._dense = None     # re-materialize verified on next use
+            if rows_idx is None:
+                self._verified[shard] = set()
+                return
+            rows_idx = np.asarray(rows_idx, np.int64)
+            for c in np.unique(rows_idx // max(self.crc_chunk_rows, 1)):
+                self._verified[shard].discard(int(c))
+
+    def corrupt_rows(self, shard: int, rows_idx: np.ndarray,
+                     seed: int = 0) -> None:
+        """Deterministically overwrite backing rows with garbage — the
+        fault-injection entry point (repro.resilience ``disk_corrupt``).
+        Spilled shards are rewritten through a fresh r+ mapping of the
+        same ``.npy`` so the store's read-only view observes the damage;
+        the touched chunks are marked suspect so memoized verification
+        does not mask it."""
+        rows_idx = np.asarray(rows_idx, np.int64)
+        if rows_idx.size == 0:
+            return
+        rng = np.random.default_rng(
+            (int(seed) & 0x7FFFFFFF, shard, int(rows_idx[0])))
+        garbage = rng.standard_normal(
+            (rows_idx.size, self.feature_dim)) * 1e3
+        b = self._backing[shard]
+        if isinstance(b, np.memmap):
+            from numpy.lib.format import open_memmap
+            mm = open_memmap(b.filename, mode="r+")
+            mm[rows_idx] = garbage.astype(self.dtype)
+            mm.flush()
+            del mm
+        else:
+            b[rows_idx] = garbage.astype(self.dtype)
+        self.mark_suspect(shard, rows_idx)
+
+    def verify_all(self) -> int:
+        """Scrub every chunk of every shard now (repairing failures);
+        returns the number of crc failures found."""
+        if self._crc is None:
+            return 0
+        before = self.stats.crc_failures
+        full = np.arange(self.local_rows, dtype=np.int64)
+        for s in range(self.num_shards):
+            self._check_rows(s, full)
+        return self.stats.crc_failures - before
+
+    def _chunk_bounds(self, chunk: int) -> tuple[int, int]:
+        a = chunk * self.crc_chunk_rows
+        return a, min(a + self.crc_chunk_rows, self.local_rows)
+
+    def _chunk_crc(self, shard: int, chunk: int) -> int:
+        a, b = self._chunk_bounds(chunk)
+        block = np.ascontiguousarray(np.asarray(self._backing[shard][a:b]))
+        return zlib.crc32(block.tobytes()) & 0xFFFFFFFF
+
+    def _shard_globals(self, shard: int) -> np.ndarray:
+        """Inverse map: shard-local backing row → global vertex id
+        (−1 for padding rows). Cached per shard."""
+        got = self._shard_globals_cache.get(shard)
+        if got is not None:
+            return got
+        if self.owner is None or self.local_idx is None:
+            raise CorruptFeatureError(
+                "repair needs bound owner/local_idx maps (FeatureStore.bind)")
+        inv = np.full(self.local_rows, -1, np.int64)
+        ids = np.flatnonzero(self.owner == shard)
+        inv[self.local_idx[ids]] = ids
+        self._shard_globals_cache[shard] = inv
+        return inv
+
+    def _repair_chunk(self, shard: int, chunk: int) -> None:
+        """Re-gather a checksum-failed chunk from the authoritative source
+        into an in-RAM patch that shadows the rotten disk region. The
+        rebuilt chunk must re-verify against the stored crc — if it does
+        not, the source itself disagrees and we refuse to guess."""
+        if self._source is None:
+            raise CorruptFeatureError(
+                f"shard {shard} chunk {chunk}: crc32 mismatch and no "
+                "authoritative source attached (FeatureStore.attach_source)")
+        a, b = self._chunk_bounds(chunk)
+        glob = self._shard_globals(shard)[a:b]
+        good = np.zeros((b - a, self.feature_dim), self.dtype)
+        real = glob >= 0
+        if real.any():
+            good[real] = np.asarray(self._source[glob[real]],
+                                    dtype=self.dtype)
+        rebuilt = zlib.crc32(
+            np.ascontiguousarray(good).tobytes()) & 0xFFFFFFFF
+        if rebuilt != int(self._crc[shard][chunk]):
+            raise CorruptFeatureError(
+                f"shard {shard} chunk {chunk}: source re-gather does not "
+                "match the recorded crc32 — source and sidecar disagree")
+        self._patches[shard][chunk] = good
+        with self._lock:
+            self.stats.repaired_rows += int(real.sum())
+
+    def _check_rows(self, shard: int, rows_idx: np.ndarray) -> None:
+        """Verify (memoized) the chunks covering ``rows_idx``; quarantine
+        and repair any that fail."""
+        chunks = np.unique(rows_idx // self.crc_chunk_rows)
+        verified = self._verified[shard]
+        patches = self._patches[shard]
+        todo = [int(c) for c in chunks
+                if int(c) not in verified and int(c) not in patches]
+        if not todo:
+            return
+        with self._crc_lock:
+            for c in todo:
+                if c in self._verified[shard] or c in patches:
+                    continue       # another thread beat us to it
+                got = self._chunk_crc(shard, c)
+                with self._lock:
+                    self.stats.crc_checked_chunks += 1
+                if got == int(self._crc[shard][c]):
+                    self._verified[shard].add(c)
+                    continue
+                with self._lock:
+                    self.stats.crc_failures += 1
+                self._repair_chunk(shard, c)
+
+    def _read_backing(self, shard: int, rows_idx: np.ndarray) -> np.ndarray:
+        """Tier-2 row read: crc-verify the touched chunks (when enabled)
+        and serve quarantined chunks from their in-RAM patches instead of
+        the rotten disk region."""
+        if self._crc is not None:
+            self._check_rows(shard, rows_idx)
+        patches = self._patches[shard]
+        if not patches:
+            return self._backing[shard][rows_idx]
+        ck = rows_idx // self.crc_chunk_rows
+        out = np.empty((rows_idx.size, self.feature_dim), self.dtype)
+        patched = np.isin(ck, np.fromiter(patches.keys(), np.int64,
+                                          len(patches)))
+        if (~patched).any():
+            out[~patched] = self._backing[shard][rows_idx[~patched]]
+        for c in np.unique(ck[patched]):
+            m = ck == c
+            out[m] = patches[int(c)][rows_idx[m] - int(c)
+                                     * self.crc_chunk_rows]
+        return out
 
 
 def spill_shards(features: np.ndarray, owner: np.ndarray,

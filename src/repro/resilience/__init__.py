@@ -1,0 +1,42 @@
+"""repro.resilience — fault injection, supervised recovery, degradation.
+
+The training stack is deterministic end to end: plans and sampling are a
+pure function of ``(epoch, it, seeds, pattern, cache_version)``, every
+pipeline/cache/tiering mode is bit-identical to its fallback, and shape
+budgets persist across restarts. This package turns that determinism into
+fault tolerance:
+
+* :mod:`~repro.resilience.faults` — a seeded :class:`FaultPlan` harness
+  that injects stragglers, dropped exchanges, background-thread deaths,
+  disk-row corruption, and NaN steps at scheduled ``(epoch, it)`` points
+  (plus :class:`ChaosPlan`, the transient-only background chaos the CI
+  chaos-smoke job runs the whole tier-1 suite under).
+* :mod:`~repro.resilience.supervisor` — :class:`ThreadSupervisor` (thread
+  failures surface at the next dispatch boundary with the originating
+  ``(epoch, it)`` attached), :class:`ResiliencePolicy`, and the
+  degradation ladder contract (pipeline→sync, cache→off, hot-tier→
+  resident; every rung bit-identical).
+* :mod:`~repro.resilience.comm` — deadline + bounded-retry + exponential
+  backoff around the host comm boundary, with per-epoch counters.
+
+Recovery invariant (the headline gate, CI-enforced): under a recoverable
+FaultPlan training completes with losses and parameters bit-identical to
+the fault-free run, with zero steady-state retraces.
+"""
+from repro.resilience.comm import CommCounters, CommTimeout, RetryPolicy, \
+    resilient_call
+from repro.resilience.faults import (ChaosPlan, FaultPlan, FaultSpec,
+                                     InjectedFault, InjectedThreadError,
+                                     TransientCommError, active_plan)
+from repro.resilience.supervisor import (BackgroundError,
+                                         CheckpointRollbackExhausted,
+                                         NonFiniteLoss, ResiliencePolicy,
+                                         StallError, ThreadSupervisor)
+
+__all__ = [
+    "FaultPlan", "FaultSpec", "ChaosPlan", "active_plan",
+    "InjectedFault", "InjectedThreadError", "TransientCommError",
+    "RetryPolicy", "CommCounters", "CommTimeout", "resilient_call",
+    "ThreadSupervisor", "BackgroundError", "StallError", "NonFiniteLoss",
+    "ResiliencePolicy", "CheckpointRollbackExhausted",
+]

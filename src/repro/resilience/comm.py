@@ -1,0 +1,94 @@
+"""Comm robustness: deadline + bounded-retry + exponential-backoff guards.
+
+In a real multi-host deployment every ``ShardComm`` all_to_all is an RPC
+fan-out that can drop, stall, or time out; in this repo's single-process
+harness those exchanges are staged at one host boundary — the iteration
+dispatch (``repro.core.distributed.prepare_iteration_args`` /
+``comm_fault_point``). :func:`resilient_call` wraps that boundary: the
+wrapped callable is attempted up to ``1 + max_retries`` times under a total
+deadline, transient failures (:class:`TransientCommError`) back off
+exponentially between attempts, and every retry/timeout lands in a
+per-epoch :class:`CommCounters` that the Trainer drains into
+``EpochStats``.
+
+Safety with buffer donation: the engine's fused train step donates
+``params``/``opt_state``; retrying a dispatch after donation would reuse
+dead buffers. The guard is therefore only sound because every injected (or
+real, host-side) transient raise happens *before* the compiled program is
+invoked — the comm fault point runs during argument staging, ahead of any
+donation. A genuine failure raised by the compiled program itself is not a
+``TransientCommError`` and propagates unretried.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+from repro.resilience.faults import TransientCommError, guarded_attempt
+
+
+class CommTimeout(RuntimeError):
+    """Retries/deadline exhausted on a transient-failing exchange."""
+
+    def __init__(self, msg: str, *, epoch: int = -1, it: int = -1,
+                 attempts: int = 0):
+        super().__init__(msg)
+        self.site = "comm"
+        self.epoch = epoch
+        self.it = it
+        self.attempts = attempts
+
+
+@dataclasses.dataclass
+class RetryPolicy:
+    """Bounded retry with exponential backoff under a total deadline."""
+
+    max_retries: int = 3          # attempts beyond the first
+    backoff_s: float = 0.005      # sleep before attempt 1's retry
+    backoff_mult: float = 2.0     # backoff_s * mult**(attempt-1)
+    deadline_s: float = 5.0       # total wall budget across attempts
+
+
+@dataclasses.dataclass
+class CommCounters:
+    """Per-epoch exchange robustness accounting (drained into EpochStats)."""
+
+    retries: int = 0
+    timeouts: int = 0
+
+    def reset(self) -> None:
+        self.retries = 0
+        self.timeouts = 0
+
+
+def resilient_call(fn: Callable, *, policy: RetryPolicy,
+                   counters: Optional[CommCounters] = None,
+                   epoch: int = -1, it: int = -1):
+    """Run ``fn()`` under the retry policy.
+
+    The attempt number is published via the ``guarded_attempt`` context var
+    so the fault injector knows a retry loop is present (comm_drop faults
+    only raise under a guard, and only while ``attempt < drops``)."""
+    t0 = time.perf_counter()
+    attempt = 0
+    while True:
+        token = guarded_attempt.set(attempt)
+        try:
+            return fn()
+        except TransientCommError as e:
+            if counters is not None:
+                counters.retries += 1
+            attempt += 1
+            elapsed = time.perf_counter() - t0
+            if attempt > policy.max_retries or elapsed > policy.deadline_s:
+                if counters is not None:
+                    counters.timeouts += 1
+                raise CommTimeout(
+                    f"exchange failed after {attempt} attempts / "
+                    f"{elapsed:.3f}s (deadline {policy.deadline_s}s): {e}",
+                    epoch=epoch, it=it, attempts=attempt) from e
+            time.sleep(policy.backoff_s * policy.backoff_mult
+                       ** (attempt - 1))
+        finally:
+            guarded_attempt.reset(token)

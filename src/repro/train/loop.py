@@ -62,6 +62,7 @@ import os
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import TimeoutError as FuturesTimeout
 from typing import Callable, Optional, Sequence
 
 import jax
@@ -77,6 +78,12 @@ from repro.core.strategies import IterationPlan, Strategy
 from repro.graph.sampler import sample_tree_block
 from repro.models.gnn.models import GNNConfig, gnn_forward, init_gnn
 from repro.optim import Optimizer, adamw
+from repro.resilience import (BackgroundError, CheckpointRollbackExhausted,
+                              CommCounters, CommTimeout, NonFiniteLoss,
+                              ResiliencePolicy, StallError, ThreadSupervisor,
+                              resilient_call)
+from repro.resilience import faults as _rfaults
+from repro.resilience.faults import InjectedFault
 from repro.train.budget import ShapeBudget
 
 
@@ -118,6 +125,14 @@ class EpochStats:
     upload_bytes: int = 0       # plan-carried feature bytes shipped to dev
     readahead_s: float = 0.0    # blocking tier-2→tier-1 install time at the
     #                             epoch boundary (forecast overlap excluded)
+    # --- resilience (repro.resilience; zeros when the policy is off) ---
+    faults_injected: int = 0    # FaultPlan firings during this epoch
+    comm_retries: int = 0       # transient exchange failures re-issued
+    comm_timeouts: int = 0      # exchanges that exhausted retries/deadline
+    bg_errors: int = 0          # background-thread failures recorded
+    epoch_attempts: int = 1     # 1 = clean; >1 = replays after recovery
+    rollbacks: int = 0          # NaN/Inf rollbacks to the epoch snapshot
+    degradations: tuple = ()    # ladder rungs taken while running this epoch
 
 
 class Trainer:
@@ -149,7 +164,8 @@ class Trainer:
                  pipeline_stack: int = 1,
                  fused: Optional[bool] = None,
                  loss_sync_iters: int = 16,
-                 fold_returns: Optional[bool] = None):
+                 fold_returns: Optional[bool] = None,
+                 resilience=None):
         self.graph = graph
         self.labels = np.asarray(labels)
         self.part = np.asarray(part)
@@ -272,6 +288,18 @@ class Trainer:
         self._readahead_enabled = self.streamed and self.store.hot_rows > 0
         if self._readahead_enabled and self._cache_prefetcher is None:
             self._cache_prefetcher = self._make_prefetcher()
+        # --- resilience (repro.resilience; None/True -> default policy,
+        # False -> off). The default policy is always-on and cheap: one
+        # params/opt snapshot per epoch, a deque peek per dispatch, an
+        # isfinite on each synced loss window.
+        self.resilience = ResiliencePolicy.resolve(resilience)
+        self._supervisor = (ThreadSupervisor()
+                            if self.resilience is not None else None)
+        self._comm_counters = CommCounters()
+        self._inline_planning = False      # degraded: plans built inline
+        self._site_failures: dict = {}     # site -> failures seen this fit
+        self._rollbacks_total = 0
+        self.degradations_taken: list = []  # cumulative rung log
 
     def _make_prefetcher(self):
         from repro.cache import EpochPrefetcher
@@ -335,6 +363,11 @@ class Trainer:
     def build_plan(self, epoch: int, it: int,
                    batch_per_model: int) -> IterationPlan:
         t0 = time.perf_counter()
+        # fault points: fire only under an installed FaultPlan, and
+        # thread-death only when this thread is supervised as "prefetch"
+        # (the inline-planning fallback must not re-trip the same fault)
+        _rfaults.sleep_point("prefetch", epoch, it)
+        _rfaults.raise_if_thread("prefetch", epoch, it)
         roots = self._roots_for(epoch, it, batch_per_model)
         assignment = self._assignment_for(roots)
         cache_index = (self.cache_store.index
@@ -357,11 +390,23 @@ class Trainer:
             with self._cache_lock:
                 for s in range(self.num_shards):
                     self._cache_policy.observe(s, plan.remote_ids[s])
+        plan.epoch_it = (epoch, it)   # provenance for the comm fault point
         if self._uploader is not None:
             # async pipeline: commit the host→device upload here, on the
             # prefetch thread, so plan i+1's transfer overlaps plan i's
-            # device execution and the dispatch path never converts leaves
-            self._uploader.commit(plan)
+            # device execution and the dispatch path never converts leaves.
+            # The commit runs under the "uploader" site so an injected
+            # uploader death is distinguishable from a planner death (they
+            # degrade differently: uploader-off vs pipeline-to-sync).
+            if _rfaults.current_site.get() is not None:
+                tok = _rfaults.current_site.set("uploader")
+                try:
+                    _rfaults.raise_if_thread("uploader", epoch, it)
+                    self._uploader.commit(plan)
+                finally:
+                    _rfaults.current_site.reset(tok)
+            else:
+                self._uploader.commit(plan)
         with self._plan_time_lock:
             self._plan_time_acc += time.perf_counter() - t0
             self._plans_built_acc += 1
@@ -434,6 +479,8 @@ class Trainer:
         """Cache-thread job: predict epoch's requests (deterministic
         sampler), select the cached set, gather its rows. Returns the
         ready-to-install (ids, rows) pair."""
+        _rfaults.sleep_point("cache", epoch, -1)
+        _rfaults.raise_if_thread("cache", epoch, -1)
         hot = self._cache_prefetcher.epoch_requests(epoch, iters)
         with self._cache_lock:
             sel = [self._cache_policy.select(s, self.cache_rows,
@@ -469,8 +516,8 @@ class Trainer:
             self._cache_select_install()
         if cache_exec is not None and not self._cache_policy.static \
                 and epoch + 1 < epochs:
-            self._cache_fut = cache_exec.submit(self._cache_compute,
-                                                epoch + 1, iters)
+            self._cache_fut = self._submit_site(
+                cache_exec, "cache", self._cache_compute, epoch + 1, iters)
         # force the host→device upload NOW so it lands in cache_refresh_s,
         # not inside the first (steady-timed) train_step of the epoch
         self.cache_store.device_table
@@ -484,6 +531,8 @@ class Trainer:
         """Cache-thread job: the per-OWNING-shard (ids, counts) forecast of
         every row each shard will *serve* next epoch — exact under the
         deterministic sampler, same replay the cache refresh uses."""
+        _rfaults.sleep_point("readahead", epoch, -1)
+        _rfaults.raise_if_thread("readahead", epoch, -1)
         return self._cache_prefetcher.epoch_touched(epoch, iters)
 
     def _readahead_install(self, touched) -> int:
@@ -517,9 +566,18 @@ class Trainer:
         else:
             self._readahead_install(self._readahead_compute(epoch, iters))
         if cache_exec is not None and epoch + 1 < epochs:
-            self._readahead_fut = cache_exec.submit(
-                self._readahead_compute, epoch + 1, iters)
+            self._readahead_fut = self._submit_site(
+                cache_exec, "readahead", self._readahead_compute,
+                epoch + 1, iters)
         return time.perf_counter() - t0
+
+    def _submit_site(self, exec_, site: str, fn, *args):
+        """Submit a background job under supervision (site + (epoch, it)
+        context recorded at raise time; see repro.resilience)."""
+        if self._supervisor is None:
+            return exec_.submit(fn, *args)
+        return self._supervisor.submit(exec_.submit, site, fn, *args,
+                                       epoch=args[0] if args else -1, it=-1)
 
     # ------------------------------------------------------------------
     # Device stepping
@@ -577,7 +635,7 @@ class Trainer:
         self.params, self.opt_state, loss = fn(
             self.params, self.opt_state, table, cache_tab, dev, denom)
         self.global_step += 1
-        return loss
+        return self._maybe_poison([plan], loss)
 
     def _dispatch_stacked(self, plans: Sequence[IterationPlan]):
         """One scanned dispatch covering ``len(plans)`` same-bucket
@@ -598,6 +656,9 @@ class Trainer:
                 # retrace, exactly like the unstacked loop, instead of a
                 # jnp.stack shape crash
                 return [self._dispatch_fused(q) for q in plans]
+        # the host comm boundary: stacked dispatch stages its own args, so
+        # it owns its fault point (fused goes through prepare_iteration_args)
+        engine.comm_fault_point(p0)
         cache_tab = self._cache_table_for(p0)
         fn = engine.get_compiled_train_step(
             self.cfg, p0.pregather, self.optimizer, mesh=self.mesh,
@@ -610,7 +671,225 @@ class Trainer:
             self.params, self.opt_state, table,
             cache_tab, dev_stack, denoms)
         self.global_step += len(plans)
-        return losses
+        return self._maybe_poison(plans, losses)
+
+    # ------------------------------------------------------------------
+    # Resilience plumbing (repro.resilience)
+    # ------------------------------------------------------------------
+
+    def _maybe_poison(self, plans, loss):
+        """nan_loss fault point: poison this step's loss AND parameters
+        (models numerical divergence — recovery requires the rollback, not
+        just dropping one loss sample). No-op without an active plan."""
+        if _rfaults.active_plan() is None:
+            return loss
+        for p in plans:
+            ei = getattr(p, "epoch_it", None)
+            if ei is None or not _rfaults.take("nan_loss", ei[0], ei[1]):
+                continue
+            nan = jnp.nan
+            self.params = jax.tree.map(
+                lambda x: x * nan
+                if jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating) else x,
+                self.params)
+            loss = jax.tree.map(lambda v: v * nan, loss)
+        return loss
+
+    def _dispatch(self, plans: Sequence[IterationPlan], epoch: int,
+                  it: int):
+        """Guarded dispatch used by both epoch loops: surface any pending
+        background error first (the "next dispatch boundary" contract),
+        then run the dispatch under the comm retry guard. Transient comm
+        faults fire during argument staging, BEFORE the compiled program
+        is invoked, so a retry never re-donates dead buffers."""
+        if self._supervisor is not None:
+            self._supervisor.check()
+        if len(plans) == 1:
+            plan = plans[0]
+            fn = ((lambda: self._dispatch_fused(plan)) if self.fused
+                  else (lambda: self.train_step(plan)))
+        else:
+            fn = lambda: self._dispatch_stacked(plans)
+        if self.resilience is None:
+            return fn()
+        return resilient_call(fn, policy=self.resilience.retry,
+                              counters=self._comm_counters,
+                              epoch=epoch, it=it)
+
+    def _plan_result(self, fut, epoch: int, it: int):
+        """Wait for a plan future under the stall deadline — a wedged
+        prefetch thread becomes a StallError instead of hanging fit()."""
+        policy = self.resilience
+        if policy is None or policy.stall_deadline_s is None:
+            return fut.result()
+        try:
+            return fut.result(timeout=policy.stall_deadline_s)
+        except (TimeoutError, FuturesTimeout):
+            raise StallError("prefetch", epoch, it,
+                             policy.stall_deadline_s) from None
+
+    def _check_finite(self, loss, epoch: int, it: int) -> None:
+        """NaN/Inf guard on a synced loss window (deferred-loss contract:
+        this is only called on values already off the device)."""
+        policy = self.resilience
+        if policy is None or not policy.guard_nonfinite:
+            return
+        v = np.asarray(loss)
+        if not np.all(np.isfinite(v)):
+            bad = v.ravel()[~np.isfinite(v.ravel())]
+            raise NonFiniteLoss(epoch, it, float(bad[0]))
+
+    def _snapshot_state(self) -> dict:
+        """Epoch-start in-memory snapshot for rollback+replay. Deep device
+        copies: the fused step donates params/opt buffers, so aliasing the
+        live trees would hand the snapshot to the donor."""
+        return {"params": jax.tree.map(jnp.array, self.params),
+                "opt": jax.tree.map(jnp.array, self.opt_state),
+                "step": self.global_step}
+
+    def _restore_state(self, snap: dict) -> None:
+        # copy again on restore — the next dispatch donates what we hand
+        # it, and the snapshot must survive a second rollback
+        self.params = jax.tree.map(jnp.array, snap["params"])
+        self.opt_state = jax.tree.map(jnp.array, snap["opt"])
+        self.global_step = snap["step"]
+
+    def _degrade(self, site: Optional[str]) -> Optional[str]:
+        """Take one degradation-ladder rung for a failing site. Every rung
+        lands on a mode that is bit-identical to the one it leaves (the
+        PR-5 pipeline≡sync, PR-3 cache parity, and PR-6 tier-parity gates)
+        — recovery costs throughput, never numerics."""
+        if site == "uploader" and self._uploader is not None:
+            # plans stop committing; dispatch converts leaves inline
+            self._uploader = None
+            return "uploader_off"
+        if site in ("prefetch", "uploader", "comm"):
+            if self.pipeline or not self._inline_planning:
+                self.pipeline = False
+                self._inline_planning = True
+                self._uploader = None
+                return "pipeline_to_sync"
+            return None
+        if site == "cache":
+            if self.cache_store is not None:
+                self.cache_store = None
+                self._cache_policy = None
+                self._cache_fut = None
+                return "cache_off"
+            return None
+        if site in ("readahead", "store"):
+            if self._readahead_enabled or not self.store.hot_bypass:
+                self._readahead_enabled = False
+                self._readahead_fut = None
+                self.store.bypass_hot(True)
+                return "resident_gather"
+            return None
+        return None
+
+    def _recover(self, e: BaseException, epoch: int) -> Optional[str]:
+        """Decide the recovery action for a failed epoch attempt. First
+        failure of a site replays in-mode (transients and once-faults clear
+        on replay — no permanent throughput loss); a repeat failure takes
+        the site's ladder rung. NaN/Inf always means rollback+replay,
+        bounded by ``max_rollbacks``."""
+        policy = self.resilience
+        site = getattr(e, "site", None)
+        if isinstance(e, BackgroundError):
+            self._supervisor.mark_delivered(e)
+            site = getattr(e.__cause__, "site", site)
+        self._supervisor.drain()
+        # abandon in-flight epoch-boundary futures: replay recomputes (or
+        # skips) them deterministically at its own boundary
+        self._cache_fut = None
+        self._readahead_fut = None
+        if isinstance(e, NonFiniteLoss):
+            self._rollbacks_total += 1
+            if self._rollbacks_total > policy.max_rollbacks:
+                raise CheckpointRollbackExhausted(
+                    f"non-finite loss persisted across "
+                    f"{policy.max_rollbacks} rollback+replay attempts at "
+                    f"epoch {epoch} — genuine divergence") from e
+            return "rollback_replay"
+        n = self._site_failures.get(site, 0) + 1
+        self._site_failures[site] = n
+        if n >= 2 and policy.degrade:
+            rung = self._degrade(site)
+            if rung is not None:
+                self.degradations_taken.append(rung)
+            return rung
+        return None
+
+    def _attempt_epoch(self, epoch: int, start_epoch: int, epochs: int,
+                      iters: int, batch_per_model: int, cache_exec, submit):
+        """One try at one epoch: inject any scheduled epoch-boundary disk
+        faults (BEFORE readahead, so the crc verification sees them), run
+        the boundary work and the iteration loop, then guard the synced
+        losses."""
+        for sp in _rfaults.take("disk_corrupt", epoch):
+            _rfaults.inject_disk_corruption(self.store, sp)
+        readahead_s = self._readahead_epoch_begin(
+            epoch, start_epoch, epochs, iters, batch_per_model, cache_exec)
+        refresh_s = self._cache_epoch_begin(
+            epoch, start_epoch, epochs, iters, batch_per_model, cache_exec)
+        if self.pipeline:
+            from repro.train.pipeline import run_pipelined_epoch
+            res = run_pipelined_epoch(
+                self, epoch, iters, batch_per_model, submit,
+                stack=self.pipeline_stack,
+                loss_sync_iters=self.loss_sync_iters)
+        else:
+            res = self._epoch_sync(epoch, iters, batch_per_model, submit)
+        self._check_finite(res.losses, epoch, iters - 1)
+        return res, readahead_s, refresh_s
+
+    _RECOVERABLE = (BackgroundError, StallError, CommTimeout, NonFiniteLoss,
+                    InjectedFault)
+
+    def _epoch_with_recovery(self, epoch: int, start_epoch: int,
+                             epochs: int, iters: int, batch_per_model: int,
+                             cache_exec, submit):
+        """The epoch attempt loop: snapshot → attempt → on a recoverable
+        failure restore + recover (replay or degrade) → re-attempt, up to
+        ``max_epoch_attempts``. Determinism makes every replay exact: the
+        same (epoch, it, seed) plans rebuild, so an absorbed fault leaves
+        losses and parameters bit-identical to a fault-free run."""
+        if self.resilience is None:
+            res, ra, rf = self._attempt_epoch(
+                epoch, start_epoch, epochs, iters, batch_per_model,
+                cache_exec, submit)
+            return res, ra, rf, {}
+        self._comm_counters.reset()
+        bg0 = self._supervisor.errors_recorded
+        fp = _rfaults.active_plan()
+        f0 = fp.fired_count() if fp is not None else 0
+        rb0 = self._rollbacks_total
+        snap = self._snapshot_state()
+        attempts = 0
+        rungs: list = []
+        while True:
+            attempts += 1
+            try:
+                res, ra, rf = self._attempt_epoch(
+                    epoch, start_epoch, epochs, iters, batch_per_model,
+                    cache_exec, submit)
+                break
+            except self._RECOVERABLE as e:
+                if attempts >= self.resilience.max_epoch_attempts:
+                    raise
+                rung = self._recover(e, epoch)
+                if rung is not None:
+                    rungs.append(rung)
+                self._restore_state(snap)
+        fp = _rfaults.active_plan()
+        meta = {"epoch_attempts": attempts,
+                "rollbacks": self._rollbacks_total - rb0,
+                "degradations": tuple(rungs),
+                "faults_injected":
+                    (fp.fired_count() if fp is not None else 0) - f0,
+                "comm_retries": self._comm_counters.retries,
+                "comm_timeouts": self._comm_counters.timeouts,
+                "bg_errors": self._supervisor.errors_recorded - bg0}
+        return res, ra, rf, meta
 
     # ------------------------------------------------------------------
     # Epoch loop
@@ -633,15 +912,15 @@ class Trainer:
         remote, num_steps, cache_hits = 0, 0, 0
         t1 = t2 = up = 0
         for it in range(iters):
-            plan = fut.result()
+            plan = self._plan_result(fut, epoch, it)
             if it + 1 < iters:
                 # double-buffer: plan i+1 builds while i executes
                 fut = submit(self.build_plan, epoch, it + 1,
                              batch_per_model)
             tc0 = engine.trace_count()
             t0 = time.perf_counter()
-            loss = (self._dispatch_fused(plan) if self.fused
-                    else self.train_step(plan))
+            loss = self._dispatch([plan], epoch, it)
+            self._check_finite(loss, epoch, it)
             losses.append(float(loss))   # blocks until device done
             iter_times.append(time.perf_counter() - t0)
             traced.append(engine.trace_count() > tc0)
@@ -685,7 +964,18 @@ class Trainer:
         start_epoch = self._maybe_resume() if resume else 0
         stats: list[EpochStats] = []
         pool = ThreadPoolExecutor(max_workers=1) if self._prefetch else None
-        submit = pool.submit if pool is not None else self._run_inline
+        if self._supervisor is None or pool is None:
+            submit = pool.submit if pool is not None else self._run_inline
+        else:
+            def submit(fn, *args):
+                # degraded rung: plans build inline on the loop thread
+                # (synchronous, unsupervised — failures raise in place)
+                if self._inline_planning:
+                    return self._run_inline(fn, *args)
+                return self._supervisor.submit(
+                    pool.submit, "prefetch", fn, *args,
+                    epoch=args[0] if args else -1,
+                    it=args[1] if len(args) > 1 else -1)
         if self.pipeline and self._uploader is None:
             from repro.train.pipeline import PlanUploader
             self._uploader = PlanUploader(budget=self.budget)
@@ -701,21 +991,10 @@ class Trainer:
                       else None)
         try:
             for epoch in range(start_epoch, epochs):
-                readahead_s = self._readahead_epoch_begin(
-                    epoch, start_epoch, epochs, iters_per_epoch,
-                    batch_per_model, cache_exec)
-                refresh_s = self._cache_epoch_begin(
-                    epoch, start_epoch, epochs, iters_per_epoch,
-                    batch_per_model, cache_exec)
-                if self.pipeline:
-                    from repro.train.pipeline import run_pipelined_epoch
-                    res = run_pipelined_epoch(
-                        self, epoch, iters_per_epoch, batch_per_model,
-                        submit, stack=self.pipeline_stack,
-                        loss_sync_iters=self.loss_sync_iters)
-                else:
-                    res = self._epoch_sync(epoch, iters_per_epoch,
-                                           batch_per_model, submit)
+                res, readahead_s, refresh_s, rmeta = \
+                    self._epoch_with_recovery(
+                        epoch, start_epoch, epochs, iters_per_epoch,
+                        batch_per_model, cache_exec, submit)
                 compile_free = res.steady_iter_s is not None
                 steady_iter = (res.steady_iter_s if compile_free
                                else res.wall_s / iters_per_epoch)
@@ -752,7 +1031,16 @@ class Trainer:
                                 tier1_bytes=res.tier1_rows * row_bytes,
                                 tier2_bytes=res.tier2_rows * row_bytes,
                                 upload_bytes=res.upload_bytes,
-                                readahead_s=readahead_s)
+                                readahead_s=readahead_s,
+                                faults_injected=rmeta.get(
+                                    "faults_injected", 0),
+                                comm_retries=rmeta.get("comm_retries", 0),
+                                comm_timeouts=rmeta.get("comm_timeouts", 0),
+                                bg_errors=rmeta.get("bg_errors", 0),
+                                epoch_attempts=rmeta.get(
+                                    "epoch_attempts", 1),
+                                rollbacks=rmeta.get("rollbacks", 0),
+                                degradations=rmeta.get("degradations", ()))
                 stats.append(st)
                 if log is not None:
                     log(f"epoch {epoch}: loss {st.loss:.4f} "
@@ -768,6 +1056,11 @@ class Trainer:
                            f"{st.readahead_s:.2f}s"
                            if self.streamed else "")
                         + ("" if st.compile_free else " (all-compile)")
+                        + (f" attempts {st.epoch_attempts}"
+                           + (f" degraded [{','.join(st.degradations)}]"
+                              if st.degradations else "")
+                           if st.epoch_attempts > 1 or st.degradations
+                           else "")
                         + (f" acc {100 * acc:.1f}%" if acc is not None
                            else ""))
                 self._maybe_checkpoint(epoch, st)
@@ -787,7 +1080,7 @@ class Trainer:
             def __init__(self, v):
                 self._v = v
 
-            def result(self):
+            def result(self, timeout=None):
                 return self._v
         return _Done(fn(*a))
 

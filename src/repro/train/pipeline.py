@@ -181,7 +181,7 @@ def run_pipelined_epoch(trainer, epoch: int, iters: int,
     tc_start = engine.trace_count()
     t_epoch = time.perf_counter()
 
-    futs: deque = deque()
+    futs: deque = deque()          # (it, future) pairs, in order
     next_it = 0
     done = 0
 
@@ -189,8 +189,8 @@ def run_pipelined_epoch(trainer, epoch: int, iters: int,
         nonlocal next_it
         while next_it < iters and (len(futs) < K + 1
                                    or next_it < done + minimum):
-            futs.append(submit(trainer.build_plan, epoch, next_it,
-                               batch_per_model))
+            futs.append((next_it, submit(trainer.build_plan, epoch,
+                                         next_it, batch_per_model)))
             next_it += 1
 
     top_up(minimum=1)
@@ -206,7 +206,13 @@ def run_pipelined_epoch(trainer, epoch: int, iters: int,
     while done < iters:
         k = min(K, iters - done)
         top_up(minimum=k)
-        plans = [futs.popleft().result() for _ in range(k)]
+        # _plan_result applies the stall deadline (a wedged prefetch
+        # thread raises StallError instead of hanging the epoch) and
+        # re-raises a supervised build failure with its (epoch, it)
+        plans = []
+        for _ in range(k):
+            it_i, fut = futs.popleft()
+            plans.append(trainer._plan_result(fut, epoch, it_i))
         top_up()
         if window_t is None:
             # the window opens at the first dispatch, after the (serial)
@@ -215,8 +221,10 @@ def run_pipelined_epoch(trainer, epoch: int, iters: int,
             window_t = time.perf_counter()
         tc0 = engine.trace_count()
         td0 = time.perf_counter()
-        loss = (trainer._dispatch_fused(plans[0]) if k == 1
-                else trainer._dispatch_stacked(plans))
+        # guarded dispatch: pending background errors surface here (the
+        # "next dispatch boundary" contract) and transient comm faults
+        # retry during argument staging, pre-donation
+        loss = trainer._dispatch(plans, epoch, done)
         dispatch_s += time.perf_counter() - td0
         raw_losses.append(loss)
         for p in plans:
@@ -241,6 +249,9 @@ def run_pipelined_epoch(trainer, epoch: int, iters: int,
             window_iters += k
         if loss_sync_iters and since_sync >= loss_sync_iters:
             jax.block_until_ready(loss)    # queue-depth throttle
+            # deferred-loss NaN/Inf guard: this window's loss is on host
+            # now — divergence is detected here, not an epoch later
+            trainer._check_finite(loss, epoch, done - 1)
             since_sync = 0
     jax.block_until_ready(trainer.params)
     t_end = time.perf_counter()

@@ -1,8 +1,26 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
 see the real single CPU device; multi-device integration tests spawn
 subprocesses that set --xla_force_host_platform_device_count themselves."""
+import os
+
 import numpy as np
 import pytest
+
+
+@pytest.fixture(scope="session", autouse=True)
+def chaos_plan():
+    """CI chaos-smoke hook: REPRO_CHAOS_SEED=<int> runs the whole suite
+    under a transient-only ChaosPlan (deterministic low-rate comm delays,
+    guarded drops, planner stalls). Every tier-1 assertion — bit-parity,
+    trace counts — must hold unchanged; that is the point."""
+    seed = os.environ.get("REPRO_CHAOS_SEED")
+    if not seed:
+        yield None
+        return
+    from repro.resilience import ChaosPlan
+    plan = ChaosPlan(seed=int(seed)).install()
+    yield plan
+    plan.uninstall()
 
 
 @pytest.fixture(scope="session")
