@@ -4,7 +4,8 @@ PYTHON ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
 .PHONY: test test-all test-chaos bench-smoke bench-plan bench-cache \
-        bench-pipeline bench-features bench-resilience train-smoke
+        bench-pipeline bench-features bench-resilience bench-obs \
+        trace-demo train-smoke
 
 # Fast lane (tier-1): everything except @pytest.mark.slow (pyproject default)
 test:
@@ -53,6 +54,18 @@ bench-features:
 # (bit-parity + ≤1.15x steady overhead; writes BENCH_resilience.json)
 bench-resilience:
 	$(PYTHON) -m benchmarks.resilience
+
+# Observability A/B: tracing-on vs tracing-off on the pipelined + cached
+# + streamed stack (bit-parity, ≤1.05x steady overhead, span/track
+# coverage of the exported timeline; writes BENCH_obs.json + the Perfetto
+# trace at benchmarks/results/obs_trace.json)
+bench-obs:
+	$(PYTHON) -m benchmarks.obs
+
+# 2-epoch pipelined + cached quickstart with span tracing on; writes a
+# Perfetto/chrome://tracing-loadable timeline to trace_demo.json
+trace-demo:
+	$(PYTHON) examples/quickstart.py --trace trace_demo.json
 
 # 3-epoch compile-once smoke train (prints first vs steady epoch times)
 train-smoke:

@@ -18,6 +18,7 @@ from repro.core.comm_model import FABRICS, ModelSpec
 from repro.graph import ldg_partition, make_dataset
 from repro.graph.partition import hash_partition, shard_features
 from repro.models.gnn import GNNConfig, init_gnn, model_param_bytes
+from repro.obs.export import run_manifest
 
 RESULTS = Path(__file__).resolve().parent / "results"
 
@@ -49,16 +50,22 @@ class Bench:
             for r in self.rows:
                 f.write(",".join(str(x) for x in r) + "\n")
 
-    def save_json(self, path: Path | None = None) -> Path:
+    def save_json(self, path: Path | None = None,
+                  seed: int | None = None) -> Path:
         """Write BENCH_<name>.json at the repo root: the machine-readable
-        bench trajectory ({case: {metric: value}}) CI and the driver read."""
+        bench trajectory ({case: {metric: value}}) CI and the driver read.
+        Every artifact carries a run manifest (git sha, jax/python
+        versions, platform — repro.obs.export) so a bench JSON can always
+        be matched to the commit that produced it."""
         out: dict = {}
         for _, case, metric, value in self.rows:
             out.setdefault(case, {})[metric] = value
         path = path or (Path(__file__).resolve().parents[1]
                         / f"BENCH_{self.name}.json")
         with open(path, "w") as f:
-            json.dump({"benchmark": self.name, "results": out}, f,
+            json.dump({"benchmark": self.name,
+                       "manifest": run_manifest(seed=seed),
+                       "results": out}, f,
                       indent=2, sort_keys=True)
         return path
 

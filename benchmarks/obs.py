@@ -1,0 +1,181 @@
+"""repro.obs benchmark: tracing must observe, never perturb.
+
+Three CI-gated contracts on the full pipelined + cached + streamed
+stack (the heaviest instrumented configuration: tiered FeatureStore,
+LFU device cache with prefetch, non-blocking fused dispatch):
+
+1. **Overhead** — steady per-iteration wall with span tracing enabled
+   stays within ``OVERHEAD_GATE_X`` (1.05×) of the tracing-off run. The
+   recorder's hot path is one bool check when off and two clock reads +
+   one ring store when on; anything above the gate is a regression on
+   the dispatch path.
+2. **Bit-parity** — losses AND parameters of the traced run are
+   bit-identical to the untraced run (tracing only reads clocks; it
+   must never touch params, plans, or rng state). Hard gate, exact 0.
+3. **Coverage** — the exported Chrome-trace JSON is schema-valid and
+   decomposes a steady iteration into the named spans (plan build,
+   upload commit, dispatch, loss sync, cache refresh, readahead) across
+   all four thread tracks (main / prefetch / uploader /
+   cache+readahead).
+
+Artifacts: BENCH_obs.json (repo root), the Perfetto-loadable timeline
+at benchmarks/results/obs_trace.json, and a registry snapshot at
+benchmarks/results/obs_metrics.jsonl (manifest header + one row per
+counter group).
+"""
+from __future__ import annotations
+
+import tempfile
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import RESULTS, Bench
+from repro.core import distributed as engine
+from repro.features import FeatureStore
+from repro.graph import ldg_partition, make_dataset
+from repro.graph.partition import shard_features
+from repro.models.gnn import GNNConfig
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.obs.export import (chrome_trace, run_manifest,
+                              trace_span_names, trace_track_names,
+                              validate_chrome_trace, write_metrics_jsonl)
+from repro.optim import adam
+from repro.train import Trainer
+
+EPOCHS = 4
+ITERS = 8
+BATCH = 8
+PARTS = 4
+SEED = 0
+OVERHEAD_GATE_X = 1.05
+
+REQUIRED_SPANS = {"plan.build", "plan.wait", "upload.commit", "dispatch",
+                  "loss.sync", "cache.refresh", "cache.forecast",
+                  "features.readahead", "features.readahead.forecast"}
+REQUIRED_TRACKS = {"main", "prefetch", "uploader", "cache+readahead"}
+
+
+def _cfg(ds):
+    return GNNConfig(model="sage", num_layers=2, hidden_dim=32,
+                     feature_dim=ds.feature_dim,
+                     num_classes=ds.num_classes, fanout=4)
+
+
+def _fit(ds, part, owner, local_idx, store, cfg):
+    tr = Trainer(graph=ds.graph, labels=ds.labels, part=part, owner=owner,
+                 local_idx=local_idx, table=store, cfg=cfg,
+                 optimizer=adam(5e-3), merging=False,
+                 train_vertices=ds.train_vertices(),
+                 cache_policy="lfu", cache_budget_bytes=1 << 20,
+                 loss_sync_iters=4)
+    stats = tr.fit(epochs=EPOCHS, iters_per_epoch=ITERS,
+                   batch_per_model=BATCH)
+    return tr, stats
+
+
+def _steady_iter_ms(stats):
+    # best steady epoch after warmup (compile excluded by the synced
+    # steady window; see repro.train.pipeline timing semantics)
+    return 1000 * float(np.min([s.steady_time_s / ITERS
+                                for s in stats[1:]]))
+
+
+def run(quick=True):
+    import jax
+
+    b = Bench("obs")
+    scale = 0.04 if quick else 0.2
+    ds = make_dataset("arxiv", scale=scale, seed=SEED)
+    part = ldg_partition(ds.graph, PARTS, passes=1)
+    table, owner, local_idx = shard_features(
+        np.asarray(ds.features), part, PARTS)
+    cfg = _cfg(ds)
+
+    with tempfile.TemporaryDirectory() as td:
+        def streamed(case):
+            budget = max(1, int(table.nbytes) // 4)
+            return FeatureStore.build(
+                ds.features, part, PARTS,
+                directory=str(Path(td) / case),
+                host_budget_bytes=budget)
+
+        # ---- A: tracing off (baseline + parity reference) ----
+        obs_trace.disable()
+        engine.clear_compile_cache()
+        tr_off, st_off = _fit(ds, part, owner, local_idx,
+                              streamed("off"), cfg)
+        off_ms = _steady_iter_ms(st_off)
+
+        # ---- B: identical run, tracing on ----
+        obs_trace.enable()
+        try:
+            engine.clear_compile_cache()
+            tr_on, st_on = _fit(ds, part, owner, local_idx,
+                                streamed("on"), cfg)
+        finally:
+            obs_trace.disable()
+        on_ms = _steady_iter_ms(st_on)
+        overhead = on_ms / off_ms
+
+        # ---- parity: losses and parameters, exact ----
+        loss_dmax = float(np.max(np.abs(
+            np.array([s.loss for s in st_on])
+            - np.array([s.loss for s in st_off]))))
+        params_equal = all(
+            np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(jax.tree.leaves(tr_off.params),
+                            jax.tree.leaves(tr_on.params)))
+        parity_ok = loss_dmax == 0.0 and params_equal
+
+        # ---- trace export + coverage ----
+        manifest = run_manifest(seed=SEED, config={
+            "epochs": EPOCHS, "iters": ITERS, "batch": BATCH,
+            "parts": PARTS, "scale": scale, "model": cfg.model})
+        doc = chrome_trace(manifest=manifest)
+        problems = validate_chrome_trace(doc)
+        spans = trace_span_names(doc)
+        tracks = trace_track_names(doc)
+        missing_spans = sorted(REQUIRED_SPANS - spans)
+        missing_tracks = sorted(REQUIRED_TRACKS - tracks)
+        coverage_ok = not missing_spans and not missing_tracks
+        schema_ok = not problems
+        RESULTS.mkdir(parents=True, exist_ok=True)
+        trace_path = RESULTS / "obs_trace.json"
+        import json
+        trace_path.write_text(json.dumps(doc))
+
+        snap = obs_metrics.registry().snapshot()
+        write_metrics_jsonl(RESULTS / "obs_metrics.jsonl",
+                            [{"kind": "counters", **snap["counters"]},
+                             {"kind": "gauges", **snap["gauges"]}],
+                            manifest=manifest)
+
+    b.emit("tracing_off", "steady_iter_ms", round(off_ms, 2))
+    b.emit("tracing_on", "steady_iter_ms", round(on_ms, 2))
+    b.emit("tracing_on", "overhead_x", round(overhead, 3))
+    b.emit("tracing_on", "span_records", len(obs_trace.records()))
+    b.emit("tracing_on", "dropped_records", obs_trace.dropped())
+    b.emit("parity", "loss_dmax_traced_vs_untraced", loss_dmax)
+    b.emit("parity", "params_bit_equal", int(params_equal))
+    b.emit("trace", "spans_named", len(spans))
+    b.emit("trace", "tracks", len(tracks))
+    b.emit("trace", "missing_spans", ";".join(missing_spans) or "none")
+    b.emit("trace", "missing_tracks", ";".join(missing_tracks) or "none")
+    b.emit("trace", "schema_problems", len(problems))
+    b.emit("trace", "file", str(trace_path))
+    b.emit("summary", "overhead_gate_x", OVERHEAD_GATE_X)
+    b.emit("summary", "meets_overhead_gate",
+           int(overhead <= OVERHEAD_GATE_X))
+    b.emit("summary", "parity_ok", int(parity_ok))
+    b.emit("summary", "coverage_ok", int(coverage_ok))
+    b.emit("summary", "schema_ok", int(schema_ok))
+    b.save_csv()
+    b.save_json(seed=SEED)
+    obs_trace.clear()
+    return b
+
+
+if __name__ == "__main__":
+    run()

@@ -23,6 +23,13 @@ tiered ``repro.features.FeatureStore`` (host hot tier capped at the given
 budget, disk below it) — losses stay bit-identical to the in-RAM run:
 
     PYTHONPATH=src python examples/quickstart.py --host-budget-bytes 200000
+
+Pass ``--trace out.json`` to record the Trainer sections with repro.obs
+span tracing and export a Perfetto-loadable timeline (open the file at
+https://ui.perfetto.dev or chrome://tracing) — one lane per thread: the
+main dispatch loop, the plan-prefetch thread, the uploader commits, and
+the cache/readahead worker. Tracing is bit-neutral: the printed losses
+are identical with and without it.
 """
 import argparse
 import tempfile
@@ -35,6 +42,7 @@ from repro.features import FeatureStore
 from repro.graph import make_dataset
 from repro.graph.partition import community_partition, shard_features
 from repro.models.gnn import GNNConfig, init_gnn
+from repro.obs import trace as obs_trace
 from repro.optim import adam
 from repro.train import ShapeBudget, Trainer
 
@@ -42,7 +50,13 @@ ap = argparse.ArgumentParser()
 ap.add_argument("--host-budget-bytes", type=int, default=0,
                 help="if > 0, run the out-of-core demo: spill features to "
                      "disk and cap the host hot tier at this many bytes")
+ap.add_argument("--trace", default=None, metavar="OUT_JSON",
+                help="record repro.obs spans across the Trainer runs and "
+                     "export a Chrome-trace/Perfetto timeline here")
 args = ap.parse_args()
+
+if args.trace:
+    obs_trace.enable()
 
 N_SHARDS = 4
 
@@ -140,3 +154,15 @@ if args.host_budget_bytes > 0:
               f"readahead {ostats[1].readahead_s * 1e3:.1f} ms")
         print(f"             losses identical to in-RAM: "
               f"{[s.loss for s in ostats] == [s.loss for s in stats]}")
+
+# 8. (--trace) export the recorded span timeline: one Perfetto lane per
+#    thread (main dispatch / prefetch / uploader / cache+readahead), plus
+#    the run manifest (git sha, jax version, platform) as trace metadata
+if args.trace:
+    from repro.obs.export import export_chrome_trace, run_manifest
+
+    obs_trace.disable()
+    n_spans = len(obs_trace.records())
+    out = export_chrome_trace(args.trace, manifest=run_manifest(seed=0))
+    print(f"\ntrace: {n_spans} spans -> {out} "
+          f"(open in https://ui.perfetto.dev or chrome://tracing)")

@@ -24,6 +24,9 @@ import dataclasses
 
 import numpy as np
 
+from repro.obs import metrics as _obs_metrics
+from repro.obs.trace import span as _obs_span
+
 
 def _next_pow2(n: int, minimum: int = 1) -> int:
     """Delegates to the budget module's canonical pow2 bucketing so the
@@ -110,7 +113,9 @@ class CacheStore:
         """(N, c_max, d) jnp array, cached across calls until an install."""
         if self._device is None:
             import jax.numpy as jnp
-            self._device = jnp.asarray(self._host)
+            with _obs_span("cache.upload", bytes=int(self._host.nbytes)):
+                self._device = jnp.asarray(self._host)
+            _obs_metrics.inc("cache.upload_bytes", int(self._host.nbytes))
         return self._device
 
     def nbytes(self) -> int:
@@ -156,6 +161,10 @@ class CacheStore:
                                 version=self.version)
         self._host = host
         self._device = None
+        _obs_metrics.inc("cache.installs")
+        _obs_metrics.inc("cache.rows_installed", rows_total)
+        if self.repads:
+            _obs_metrics.registry().gauge("cache.repads").set(self.repads)
         return {"rows": rows_total, "bytes": rows_total * self.feature_dim
                 * self.dtype.itemsize, "c_max": self.c_max,
                 "version": self.version}
@@ -168,5 +177,9 @@ class CacheStore:
         disk) instead of a caller-held dense host copy — the tier-0
         refresh path of the feature hierarchy. The store must have bound
         owner/local_idx maps (``take_global``)."""
-        rows = [feature_store.take_global(ids) for ids in ids_per_shard]
-        return self.install(ids_per_shard, rows)
+        with _obs_span("cache.install",
+                       rows=int(sum(np.asarray(i).size
+                                    for i in ids_per_shard))):
+            rows = [feature_store.take_global(ids)
+                    for ids in ids_per_shard]
+            return self.install(ids_per_shard, rows)

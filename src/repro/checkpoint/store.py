@@ -33,6 +33,9 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+from repro.obs import metrics as _obs_metrics
+from repro.obs.trace import span as _obs_span
+
 
 class CheckpointCorrupt(RuntimeError):
     """A checkpoint's files exist but cannot be decoded (truncated write,
@@ -110,6 +113,12 @@ def save_checkpoint(directory: str | Path, step: int, tree: Any,
                     extra: Optional[dict] = None, keep: int = 3) -> Path:
     """Crash-atomically write ``step-<step>.npz`` + manifest; prune old
     ones only once the new checkpoint is fully durable."""
+    with _obs_span("ckpt.save", step=int(step)):
+        _obs_metrics.inc("ckpt.saves")
+        return _save_checkpoint(directory, step, tree, extra, keep)
+
+
+def _save_checkpoint(directory, step, tree, extra, keep) -> Path:
     directory = Path(directory)
     directory.mkdir(parents=True, exist_ok=True)
     leaves, treedef = _flatten(tree)
@@ -204,6 +213,12 @@ def load_checkpoint(directory: str | Path, tree_like: Any,
     on a filesystem that reordered the rename) is skipped with a warning
     and the previous durable one is restored. An explicit ``step`` fails
     loudly instead — the caller asked for that exact state."""
+    with _obs_span("ckpt.load", step=-1 if step is None else int(step)):
+        _obs_metrics.inc("ckpt.loads")
+        return _load_checkpoint(directory, tree_like, step)
+
+
+def _load_checkpoint(directory, tree_like, step) -> tuple[Any, int, dict]:
     directory = Path(directory)
     if step is not None:
         return _load_step(directory, step, tree_like)

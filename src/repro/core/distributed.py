@@ -66,6 +66,8 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.models.gnn.models import GNNConfig, gnn_loss
+from repro.obs import metrics as _obs_metrics
+from repro.obs import trace as _obs_trace
 
 
 def _shard_map(body, mesh, in_specs, out_specs):
@@ -324,6 +326,10 @@ def _note_trace(kind: str, cfg: GNNConfig, pregather: bool, table, cache,
     _TRACE_LOG.append((kind, cfg.model, bool(pregather),
                        tuple(table.shape), tuple(cache.shape),
                        _shape_sig(dev)))
+    # telemetry (repro.obs): retraces after epoch 0 are defects the CI
+    # gates watch for — surface them on the unified registry + timeline
+    _obs_metrics.inc("engine.traces")
+    _obs_trace.event("engine.retrace", kind=kind, model=cfg.model)
 
 
 def get_compiled_iteration(cfg: GNNConfig, pregather: bool,

@@ -31,6 +31,7 @@ import numpy as np
 
 from repro.graph.sampler import TreeBlock, sample_tree_block
 from repro.graph.structs import CSRGraph
+from repro.obs import trace as _obs_trace
 from repro.core.micrograph import (
     AssignmentMatrix, hopgnn_assignment, lo_assignment,
     model_centric_assignment,
@@ -42,12 +43,22 @@ from repro.core.pregather import (GatherPlan, PlanOverflow, build_gather_plan,
 Strategy = Literal["model_centric", "hopgnn", "lo"]
 
 
-def _pmap(executor: Optional[Executor], fn, items: list) -> list:
+def _pmap(executor: Optional[Executor], fn, items: list,
+          label: Optional[str] = None) -> list:
     """Map ``fn`` over ``items``, fanning out on ``executor`` when given.
 
     The planner's per-(shard, step) work is numpy-heavy (sampling, dedup,
     searchsorted translation) and releases the GIL, so a small thread pool
-    gives real multi-core planning without pickling graph structures."""
+    gives real multi-core planning without pickling graph structures.
+    With ``label`` and tracing enabled, each item is recorded as a span on
+    whichever thread runs it — the planner-pool fan-out shows up as its
+    own Perfetto lanes."""
+    if label is not None and _obs_trace.is_enabled():
+        inner = fn
+
+        def fn(item, _inner=inner, _label=label):  # noqa: F811
+            with _obs_trace.span(_label):
+                return _inner(item)
     if executor is None or len(items) <= 1:
         return [fn(x) for x in items]
     return list(executor.map(fn, items))
@@ -297,7 +308,7 @@ def plan_iteration(graph: CSRGraph,
     blks = _pmap(sample_exec,
                  lambda j: sample_tree_block(graph, j[2], num_layers, fanout,
                                              rng=rng, seed=sample_seed),
-                 jobs)
+                 jobs, label="plan.sample")
     blocks: list[list[TreeBlock]] = [[None] * T for _ in range(n)]  # [s][t]
     true_root_blocks: list[TreeBlock] = []      # unpadded, for accounting
     for (s, t, _, k), blk in zip(jobs, blks):
@@ -338,7 +349,8 @@ def plan_iteration(graph: CSRGraph,
                 for h in range(num_layers + 1):
                     hop_idx[h][s, t] = widx[h]
 
-        _pmap(executor, translate_shard, list(range(n)))
+        _pmap(executor, translate_shard, list(range(n)),
+              label="plan.translate")
         remote_exact = plan.remote_rows_exact()
         cache_hit_rows = plan.cache_hit_rows()
         # only trailing-LFU observation consumes remote_ids; don't tax the
@@ -361,7 +373,7 @@ def plan_iteration(graph: CSRGraph,
                                          for s in range(n)],
                                         owner, local_idx, n, local_rows,
                                         r_max, cache=cache_index),
-            list(range(T)))
+            list(range(T)), label="plan.step_gather")
         r_max_eff = r_max or max(p.r_max for p in step_plans)
         c_max_eff = step_plans[0].c_max if step_plans else 0
         if any(p.req_count.max() > r_max_eff for p in step_plans):
@@ -384,7 +396,8 @@ def plan_iteration(graph: CSRGraph,
                 for h in range(num_layers + 1):
                     hop_idx[h][s, t] = widx[h]
 
-        _pmap(executor, translate_step, list(range(T)))
+        _pmap(executor, translate_step, list(range(T)),
+              label="plan.translate")
         req = np.zeros((n, n, r_max_eff), np.int32)  # unused in per-step mode
         l_max_eff = 0
         feat_local = feat_fetch = tier_stats = None

@@ -57,6 +57,8 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from repro.obs import metrics as _obs_metrics
+
 
 class CorruptFeatureError(RuntimeError):
     """Backing-tier checksum mismatch with no authoritative source to
@@ -316,15 +318,11 @@ class FeatureStore:
             return out
         if self._hot is None:                      # resident: all host RAM
             out[:] = self._read_backing(shard, rows_idx)
-            with self._lock:
-                self.stats.t1_rows += int(rows_idx.size)
-                self.stats.gathers += 1
+            self._acct_gather(int(rows_idx.size), 0)
             return out
         if self._hot_bypass:                       # degraded: tier 2 only
             out[:] = self._read_backing(shard, rows_idx)
-            with self._lock:
-                self.stats.t2_rows += int(rows_idx.size)
-                self.stats.gathers += 1
+            self._acct_gather(0, int(rows_idx.size))
             return out
         hot = self._hot[shard]
         hit, pos = hot.hit_split(rows_idx)
@@ -334,11 +332,21 @@ class FeatureStore:
         if n_hit < rows_idx.size:
             miss = ~hit
             out[miss] = self._read_backing(shard, rows_idx[miss])
-        with self._lock:
-            self.stats.t1_rows += n_hit
-            self.stats.t2_rows += int(rows_idx.size) - n_hit
-            self.stats.gathers += 1
+        self._acct_gather(n_hit, int(rows_idx.size) - n_hit)
         return out
+
+    def _acct_gather(self, t1: int, t2: int) -> None:
+        """One gather's tier accounting: the lock-scoped TierStats view
+        and the process-wide repro.obs registry move together."""
+        with self._lock:
+            self.stats.t1_rows += t1
+            self.stats.t2_rows += t2
+            self.stats.gathers += 1
+        if t1:
+            _obs_metrics.inc("features.t1_rows", t1)
+        if t2:
+            _obs_metrics.inc("features.t2_rows", t2)
+        _obs_metrics.inc("features.gathers")
 
     def take_global(self, ids: np.ndarray) -> np.ndarray:
         """Feature rows by *global vertex id*, resolved through the tier
@@ -395,6 +403,7 @@ class FeatureStore:
         self._hot[shard].install(rows_idx, rows)
         with self._lock:
             self.stats.readahead_rows += int(rows_idx.size)
+        _obs_metrics.inc("features.readahead_rows", int(rows_idx.size))
         return int(rows_idx.size)
 
     # ------------------------------------------------------------------
@@ -576,6 +585,7 @@ class FeatureStore:
         self._patches[shard][chunk] = good
         with self._lock:
             self.stats.repaired_rows += int(real.sum())
+        _obs_metrics.inc("features.repaired_rows", int(real.sum()))
 
     def _check_rows(self, shard: int, rows_idx: np.ndarray) -> None:
         """Verify (memoized) the chunks covering ``rows_idx``; quarantine
@@ -594,11 +604,13 @@ class FeatureStore:
                 got = self._chunk_crc(shard, c)
                 with self._lock:
                     self.stats.crc_checked_chunks += 1
+                _obs_metrics.inc("features.crc_checked_chunks")
                 if got == int(self._crc[shard][c]):
                     self._verified[shard].add(c)
                     continue
                 with self._lock:
                     self.stats.crc_failures += 1
+                _obs_metrics.inc("features.crc_failures")
                 self._repair_chunk(shard, c)
 
     def _read_backing(self, shard: int, rows_idx: np.ndarray) -> np.ndarray:

@@ -1,0 +1,23 @@
+"""repro.obs — span tracing, metrics registry, Perfetto export.
+
+Three small pieces threaded through the whole training stack:
+
+- :mod:`repro.obs.trace`   ring-buffer span recorder (``span``/``event``)
+- :mod:`repro.obs.metrics` unified counter/gauge/histogram registry
+- :mod:`repro.obs.export`  Chrome-trace/Perfetto + JSONL emitters with
+  a run manifest (git sha, versions, platform)
+
+Tracing is off by default and must never change numerics: a run with
+``trace.enable()`` is bit-identical to the same run without (CI-gated
+in benchmarks/obs.py along with a ≤1.05× steady-iteration overhead
+gate).
+"""
+from repro.obs import metrics, trace  # noqa: F401
+from repro.obs.export import (chrome_trace, export_chrome_trace,  # noqa: F401
+                              run_manifest, write_metrics_jsonl)
+from repro.obs.metrics import registry  # noqa: F401
+from repro.obs.trace import event, span  # noqa: F401
+
+__all__ = ["trace", "metrics", "span", "event", "registry",
+           "run_manifest", "chrome_trace", "export_chrome_trace",
+           "write_metrics_jsonl"]

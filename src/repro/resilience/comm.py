@@ -25,6 +25,8 @@ import dataclasses
 import time
 from typing import Callable, Optional
 
+from repro.obs import metrics as _obs_metrics
+from repro.obs.trace import event as _obs_event
 from repro.resilience.faults import TransientCommError, guarded_attempt
 
 
@@ -79,11 +81,16 @@ def resilient_call(fn: Callable, *, policy: RetryPolicy,
         except TransientCommError as e:
             if counters is not None:
                 counters.retries += 1
+            # every resilient_call site lands on the unified registry,
+            # whether or not the caller passed per-epoch counters
+            _obs_metrics.inc("comm.retries")
+            _obs_event("comm.retry", epoch=epoch, it=it, attempt=attempt)
             attempt += 1
             elapsed = time.perf_counter() - t0
             if attempt > policy.max_retries or elapsed > policy.deadline_s:
                 if counters is not None:
                     counters.timeouts += 1
+                _obs_metrics.inc("comm.timeouts")
                 raise CommTimeout(
                     f"exchange failed after {attempt} attempts / "
                     f"{elapsed:.3f}s (deadline {policy.deadline_s}s): {e}",

@@ -60,6 +60,19 @@ from typing import List, Optional
 
 import numpy as np
 
+from repro.obs import metrics as _obs_metrics
+from repro.obs.trace import event as _obs_event
+
+
+def _mark_fired(kind: str, site: str, epoch: int, it: int) -> None:
+    """Telemetry for one fired fault (repro.obs): a registry counter per
+    kind plus an instant mark on the current thread's timeline track, so
+    a chaos run's exported trace shows exactly what was absorbed where."""
+    _obs_metrics.inc("faults.fired")
+    _obs_metrics.inc(f"faults.{kind}")
+    _obs_event(f"fault.{kind}", site=site or "", epoch=epoch, it=it)
+
+
 # Supervisor site of the current thread ("prefetch"/"uploader"/"cache"/
 # "readahead"); set by ThreadSupervisor around background jobs. thread_exc
 # faults fire only when this matches their site.
@@ -141,6 +154,8 @@ class FaultPlan:
                     self._spent.add(i)
                 self.fired.append((sp.kind, sp.site, epoch, it))
                 out.append(sp)
+        for sp in out:
+            _mark_fired(sp.kind, sp.site, epoch, it)
         return out
 
     def fired_count(self) -> int:
@@ -229,6 +244,7 @@ class ChaosPlan(FaultPlan):
                        drops=1, once=False)
         with self._lock:
             self.fired.append((kind, site or "", epoch, it))
+        _mark_fired(kind, site or "", epoch, it)
         return [sp]
 
 

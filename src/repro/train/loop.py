@@ -77,6 +77,8 @@ from repro.core.micrograph import hopgnn_assignment
 from repro.core.strategies import IterationPlan, Strategy
 from repro.graph.sampler import sample_tree_block
 from repro.models.gnn.models import GNNConfig, gnn_forward, init_gnn
+from repro.obs import metrics as obs_metrics
+from repro.obs.trace import span as obs_span
 from repro.optim import Optimizer, adamw
 from repro.resilience import (BackgroundError, CheckpointRollbackExhausted,
                               CommCounters, CommTimeout, NonFiniteLoss,
@@ -133,6 +135,10 @@ class EpochStats:
     epoch_attempts: int = 1     # 1 = clean; >1 = replays after recovery
     rollbacks: int = 0          # NaN/Inf rollbacks to the epoch snapshot
     degradations: tuple = ()    # ladder rungs taken while running this epoch
+    # --- feature-integrity surface (repro.features crc, via repro.obs) ---
+    crc_failures: int = 0       # backing-tier checksum mismatches this epoch
+    repaired_rows: int = 0      # rows re-gathered from the source after a
+    #                             quarantined chunk failed verification
 
 
 class Trainer:
@@ -362,6 +368,11 @@ class Trainer:
 
     def build_plan(self, epoch: int, it: int,
                    batch_per_model: int) -> IterationPlan:
+        with obs_span("plan.build", epoch=epoch, it=it):
+            return self._build_plan(epoch, it, batch_per_model)
+
+    def _build_plan(self, epoch: int, it: int,
+                    batch_per_model: int) -> IterationPlan:
         t0 = time.perf_counter()
         # fault points: fire only under an installed FaultPlan, and
         # thread-death only when this thread is supervised as "prefetch"
@@ -398,15 +409,17 @@ class Trainer:
             # The commit runs under the "uploader" site so an injected
             # uploader death is distinguishable from a planner death (they
             # degrade differently: uploader-off vs pipeline-to-sync).
-            if _rfaults.current_site.get() is not None:
-                tok = _rfaults.current_site.set("uploader")
-                try:
-                    _rfaults.raise_if_thread("uploader", epoch, it)
+            with obs_span("upload.commit", track="uploader",
+                          epoch=epoch, it=it):
+                if _rfaults.current_site.get() is not None:
+                    tok = _rfaults.current_site.set("uploader")
+                    try:
+                        _rfaults.raise_if_thread("uploader", epoch, it)
+                        self._uploader.commit(plan)
+                    finally:
+                        _rfaults.current_site.reset(tok)
+                else:
                     self._uploader.commit(plan)
-                finally:
-                    _rfaults.current_site.reset(tok)
-            else:
-                self._uploader.commit(plan)
         with self._plan_time_lock:
             self._plan_time_acc += time.perf_counter() - t0
             self._plans_built_acc += 1
@@ -479,15 +492,16 @@ class Trainer:
         """Cache-thread job: predict epoch's requests (deterministic
         sampler), select the cached set, gather its rows. Returns the
         ready-to-install (ids, rows) pair."""
-        _rfaults.sleep_point("cache", epoch, -1)
-        _rfaults.raise_if_thread("cache", epoch, -1)
-        hot = self._cache_prefetcher.epoch_requests(epoch, iters)
-        with self._cache_lock:
-            sel = [self._cache_policy.select(s, self.cache_rows,
-                                             hot_ids=ids, hot_counts=cnt)
-                   for s, (ids, cnt) in enumerate(hot)]
-        rows = [self._features_of(ids) for ids in sel]
-        return sel, rows
+        with obs_span("cache.forecast", epoch=epoch):
+            _rfaults.sleep_point("cache", epoch, -1)
+            _rfaults.raise_if_thread("cache", epoch, -1)
+            hot = self._cache_prefetcher.epoch_requests(epoch, iters)
+            with self._cache_lock:
+                sel = [self._cache_policy.select(s, self.cache_rows,
+                                                 hot_ids=ids, hot_counts=cnt)
+                       for s, (ids, cnt) in enumerate(hot)]
+            rows = [self._features_of(ids) for ids in sel]
+            return sel, rows
 
     def _cache_epoch_begin(self, epoch: int, first_epoch: int, epochs: int,
                            iters: int, batch_per_model: int,
@@ -499,29 +513,32 @@ class Trainer:
         here."""
         if not self.cache_enabled:
             return 0.0
-        t0 = time.perf_counter()
-        self._prefetch_batch = batch_per_model
-        if self._cache_fut is not None:
-            ids, rows = self._cache_fut.result()
-            self._cache_fut = None
-            self.cache_store.install(ids, rows)
-        elif epoch == first_epoch and self._cache_policy.static:
-            # degree policy: one static selection, installed before the
-            # first plan and never refreshed
-            self._cache_select_install()
-        elif not self._cache_policy.static and cache_exec is None \
-                and epoch > first_epoch:
-            # trailing LFU (prefetch off): select from frequencies observed
-            # in earlier epochs' plans
-            self._cache_select_install()
-        if cache_exec is not None and not self._cache_policy.static \
-                and epoch + 1 < epochs:
-            self._cache_fut = self._submit_site(
-                cache_exec, "cache", self._cache_compute, epoch + 1, iters)
-        # force the host→device upload NOW so it lands in cache_refresh_s,
-        # not inside the first (steady-timed) train_step of the epoch
-        self.cache_store.device_table
-        return time.perf_counter() - t0
+        with obs_span("cache.refresh", epoch=epoch):
+            t0 = time.perf_counter()
+            self._prefetch_batch = batch_per_model
+            if self._cache_fut is not None:
+                ids, rows = self._cache_fut.result()
+                self._cache_fut = None
+                self.cache_store.install(ids, rows)
+            elif epoch == first_epoch and self._cache_policy.static:
+                # degree policy: one static selection, installed before the
+                # first plan and never refreshed
+                self._cache_select_install()
+            elif not self._cache_policy.static and cache_exec is None \
+                    and epoch > first_epoch:
+                # trailing LFU (prefetch off): select from frequencies
+                # observed in earlier epochs' plans
+                self._cache_select_install()
+            if cache_exec is not None and not self._cache_policy.static \
+                    and epoch + 1 < epochs:
+                self._cache_fut = self._submit_site(
+                    cache_exec, "cache", self._cache_compute,
+                    epoch + 1, iters)
+            # force the host→device upload NOW so it lands in
+            # cache_refresh_s, not inside the first (steady-timed)
+            # train_step of the epoch
+            self.cache_store.device_table
+            return time.perf_counter() - t0
 
     # ------------------------------------------------------------------
     # Tiered-store readahead (repro.features, tier 2 -> tier 1)
@@ -531,9 +548,10 @@ class Trainer:
         """Cache-thread job: the per-OWNING-shard (ids, counts) forecast of
         every row each shard will *serve* next epoch — exact under the
         deterministic sampler, same replay the cache refresh uses."""
-        _rfaults.sleep_point("readahead", epoch, -1)
-        _rfaults.raise_if_thread("readahead", epoch, -1)
-        return self._cache_prefetcher.epoch_touched(epoch, iters)
+        with obs_span("features.readahead.forecast", epoch=epoch):
+            _rfaults.sleep_point("readahead", epoch, -1)
+            _rfaults.raise_if_thread("readahead", epoch, -1)
+            return self._cache_prefetcher.epoch_touched(epoch, iters)
 
     def _readahead_install(self, touched) -> int:
         """Swap the forecast rows into each shard's host hot tier. Sorted by
@@ -557,19 +575,21 @@ class Trainer:
         refresh gathers hit the freshly-warmed hot tier."""
         if not self._readahead_enabled:
             return 0.0
-        t0 = time.perf_counter()
-        self._prefetch_batch = batch_per_model
-        if self._readahead_fut is not None:
-            touched = self._readahead_fut.result()
-            self._readahead_fut = None
-            self._readahead_install(touched)
-        else:
-            self._readahead_install(self._readahead_compute(epoch, iters))
-        if cache_exec is not None and epoch + 1 < epochs:
-            self._readahead_fut = self._submit_site(
-                cache_exec, "readahead", self._readahead_compute,
-                epoch + 1, iters)
-        return time.perf_counter() - t0
+        with obs_span("features.readahead", epoch=epoch):
+            t0 = time.perf_counter()
+            self._prefetch_batch = batch_per_model
+            if self._readahead_fut is not None:
+                touched = self._readahead_fut.result()
+                self._readahead_fut = None
+                self._readahead_install(touched)
+            else:
+                self._readahead_install(
+                    self._readahead_compute(epoch, iters))
+            if cache_exec is not None and epoch + 1 < epochs:
+                self._readahead_fut = self._submit_site(
+                    cache_exec, "readahead", self._readahead_compute,
+                    epoch + 1, iters)
+            return time.perf_counter() - t0
 
     def _submit_site(self, exec_, site: str, fn, *args):
         """Submit a background job under supervision (site + (epoch, it)
@@ -912,16 +932,19 @@ class Trainer:
         remote, num_steps, cache_hits = 0, 0, 0
         t1 = t2 = up = 0
         for it in range(iters):
-            plan = self._plan_result(fut, epoch, it)
+            with obs_span("plan.wait", epoch=epoch, it=it):
+                plan = self._plan_result(fut, epoch, it)
             if it + 1 < iters:
                 # double-buffer: plan i+1 builds while i executes
                 fut = submit(self.build_plan, epoch, it + 1,
                              batch_per_model)
             tc0 = engine.trace_count()
             t0 = time.perf_counter()
-            loss = self._dispatch([plan], epoch, it)
+            with obs_span("dispatch", epoch=epoch, it=it):
+                loss = self._dispatch([plan], epoch, it)
             self._check_finite(loss, epoch, it)
-            losses.append(float(loss))   # blocks until device done
+            with obs_span("loss.sync", epoch=epoch, it=it):
+                losses.append(float(loss))   # blocks until device done
             iter_times.append(time.perf_counter() - t0)
             traced.append(engine.trace_count() > tc0)
             remote += plan.remote_rows_exact
@@ -963,7 +986,9 @@ class Trainer:
         """
         start_epoch = self._maybe_resume() if resume else 0
         stats: list[EpochStats] = []
-        pool = ThreadPoolExecutor(max_workers=1) if self._prefetch else None
+        pool = (ThreadPoolExecutor(max_workers=1,
+                                   thread_name_prefix="prefetch")
+                if self._prefetch else None)
         if self._supervisor is None or pool is None:
             submit = pool.submit if pool is not None else self._run_inline
         else:
@@ -991,6 +1016,8 @@ class Trainer:
                       else None)
         try:
             for epoch in range(start_epoch, epochs):
+                crc0 = (self.store.stats.crc_failures,
+                        self.store.stats.repaired_rows)
                 res, readahead_s, refresh_s, rmeta = \
                     self._epoch_with_recovery(
                         epoch, start_epoch, epochs, iters_per_epoch,
@@ -1040,8 +1067,13 @@ class Trainer:
                                 epoch_attempts=rmeta.get(
                                     "epoch_attempts", 1),
                                 rollbacks=rmeta.get("rollbacks", 0),
-                                degradations=rmeta.get("degradations", ()))
+                                degradations=rmeta.get("degradations", ()),
+                                crc_failures=self.store.stats.crc_failures
+                                - crc0[0],
+                                repaired_rows=self.store.stats.repaired_rows
+                                - crc0[1])
                 stats.append(st)
+                obs_metrics.publish_epoch_stats(st)
                 if log is not None:
                     log(f"epoch {epoch}: loss {st.loss:.4f} "
                         f"steps {st.num_steps} remote_rows {st.remote_rows} "

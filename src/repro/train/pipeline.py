@@ -56,6 +56,7 @@ import jax
 import numpy as np
 
 from repro.core import distributed as engine
+from repro.obs.trace import event as obs_event, span as obs_span
 
 
 class PlanUploader:
@@ -212,7 +213,8 @@ def run_pipelined_epoch(trainer, epoch: int, iters: int,
         plans = []
         for _ in range(k):
             it_i, fut = futs.popleft()
-            plans.append(trainer._plan_result(fut, epoch, it_i))
+            with obs_span("plan.wait", epoch=epoch, it=it_i):
+                plans.append(trainer._plan_result(fut, epoch, it_i))
         top_up()
         if window_t is None:
             # the window opens at the first dispatch, after the (serial)
@@ -224,7 +226,8 @@ def run_pipelined_epoch(trainer, epoch: int, iters: int,
         # guarded dispatch: pending background errors surface here (the
         # "next dispatch boundary" contract) and transient comm faults
         # retry during argument staging, pre-donation
-        loss = trainer._dispatch(plans, epoch, done)
+        with obs_span("dispatch", epoch=epoch, it=done):
+            loss = trainer._dispatch(plans, epoch, done)
         dispatch_s += time.perf_counter() - td0
         raw_losses.append(loss)
         for p in plans:
@@ -242,18 +245,26 @@ def run_pipelined_epoch(trainer, epoch: int, iters: int,
             # this dispatch (re)traced: drain the queue and restart the
             # steady window after the sync so compile time never leaks
             # into the merging controller's signal
-            jax.block_until_ready(trainer.params)
+            obs_event("pipeline.retrace", epoch=epoch, it=done - 1)
+            with obs_span("trace.sync", epoch=epoch, it=done - 1):
+                jax.block_until_ready(trainer.params)
             window_t = time.perf_counter()
             window_iters = 0
         else:
             window_iters += k
         if loss_sync_iters and since_sync >= loss_sync_iters:
-            jax.block_until_ready(loss)    # queue-depth throttle
+            # device-time reconciliation point: this synced window (and
+            # the epoch-boundary one below) is where device execution
+            # becomes visible to the host timeline — dispatch spans only
+            # measure host-side enqueue in the non-blocking loop
+            with obs_span("loss.sync", epoch=epoch, it=done - 1):
+                jax.block_until_ready(loss)    # queue-depth throttle
             # deferred-loss NaN/Inf guard: this window's loss is on host
             # now — divergence is detected here, not an epoch later
             trainer._check_finite(loss, epoch, done - 1)
             since_sync = 0
-    jax.block_until_ready(trainer.params)
+    with obs_span("loss.sync", epoch=epoch, it=iters - 1, boundary=True):
+        jax.block_until_ready(trainer.params)
     t_end = time.perf_counter()
     if window_iters:
         steady = (t_end - window_t) / window_iters
