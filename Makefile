@@ -5,7 +5,7 @@ export PYTHONPATH := src:$(PYTHONPATH)
 
 .PHONY: test test-all test-chaos bench-smoke bench-plan bench-cache \
         bench-pipeline bench-features bench-resilience bench-obs \
-        trace-demo train-smoke
+        bench-serve trace-demo train-smoke serve-demo
 
 # Fast lane (tier-1): everything except @pytest.mark.slow (pyproject default)
 test:
@@ -62,10 +62,24 @@ bench-resilience:
 bench-obs:
 	$(PYTHON) -m benchmarks.obs
 
+# Online-inference suite: dynamic micro-batcher vs batch-size-1 at
+# saturation (≥2x gate), offered-QPS latency sweep (p50/p99), served ==
+# offline bit-parity, zero retraces after warmup
+# (writes BENCH_serve.json at the repo root)
+bench-serve:
+	$(PYTHON) -m benchmarks.serve
+
+# Checkpoint → precomputed embeddings → zipf request stream through the
+# tiered GNNServer; prints p50/p99 latency and the tier breakdown
+serve-demo:
+	$(PYTHON) examples/serve_gnn.py
+
 # 2-epoch pipelined + cached quickstart with span tracing on; writes a
-# Perfetto/chrome://tracing-loadable timeline to trace_demo.json
+# Perfetto/chrome://tracing-loadable timeline under benchmarks/results/
+# (kept out of the checkout root — the results dir is gitignored)
 trace-demo:
-	$(PYTHON) examples/quickstart.py --trace trace_demo.json
+	@mkdir -p benchmarks/results
+	$(PYTHON) examples/quickstart.py --trace benchmarks/results/trace_demo.json
 
 # 3-epoch compile-once smoke train (prints first vs steady epoch times)
 train-smoke:

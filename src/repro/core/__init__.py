@@ -21,9 +21,11 @@ Public API:
 The compile-once training loop over these primitives lives in
 :mod:`repro.train` (shape budgets, compiled-fn reuse, plan prefetching).
 """
-from repro.core.strategies import plan_iteration, IterationPlan, Strategy
+from repro.core.strategies import (plan_iteration, plan_inference,
+                                   InferencePlan, IterationPlan, Strategy)
 from repro.core.distributed import (
     run_iteration, make_sharded_iteration, get_compiled_iteration,
+    get_compiled_inference, infer_trace_count,
     EmulatedComm, ShardComm,
 )
 from repro.core.merging import MergingController, fold_assignment
@@ -32,8 +34,10 @@ from repro.core.p3 import P3Plan, P3Unsupported, plan_p3, run_p3_iteration
 from repro.core import comm_model
 
 __all__ = [
-    "plan_iteration", "IterationPlan", "Strategy", "run_iteration",
+    "plan_iteration", "plan_inference", "InferencePlan", "IterationPlan",
+    "Strategy", "run_iteration",
     "make_sharded_iteration", "get_compiled_iteration",
+    "get_compiled_inference", "infer_trace_count",
     "EmulatedComm", "ShardComm",
     "MergingController", "fold_assignment", "PlanOverflow", "comm_model",
     "P3Plan", "P3Unsupported", "plan_p3", "run_p3_iteration",

@@ -65,7 +65,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.models.gnn.models import GNNConfig, gnn_loss
+from repro.models.gnn.models import GNNConfig, gnn_forward, gnn_loss
 from repro.obs import metrics as _obs_metrics
 from repro.obs import trace as _obs_trace
 
@@ -360,6 +360,41 @@ def get_compiled_iteration(cfg: GNNConfig, pregather: bool,
                                   streamed))
         _COMPILE_CACHE[key] = fn
     return fn
+
+
+def get_compiled_inference(cfg: GNNConfig):
+    """Cached jitted serving forward (repro.serve's device program).
+
+    Signature ``fn(params, cache_tab, fetched, *hop_idx) -> logits`` where
+    ``cache_tab`` is the serve cache's resident ``(c_max, d)`` hot rows
+    (height 0 disables it), ``fetched`` the micro-batch's host-gathered
+    ``(u_max, d)`` unique rows, and ``hop_idx[h]`` the
+    ``(batch_pad · fanout^h,)`` int32 tree positions into the concatenated
+    ``[cached | fetched]`` workspace. Lives in the same compile cache and
+    trace log as the training programs (kind ``"infer"``), so the serving
+    zero-retraces-after-warmup gate reads the exact signal the training
+    compile-once tests do.
+    """
+    key = ("infer", cfg)
+    fn = _COMPILE_CACHE.get(key)
+    if fn is None:
+        from repro.kernels import ops
+
+        def infer(params, cache_tab, fetched, *hop_idx):
+            _note_trace("infer", cfg, True, fetched, cache_tab,
+                        list(hop_idx))
+            ws = jnp.concatenate([cache_tab, fetched], 0)
+            feats = [ops.gather_rows(ws, i) for i in hop_idx]
+            return gnn_forward(params, cfg, feats)
+
+        fn = jax.jit(infer)
+        _COMPILE_CACHE[key] = fn
+    return fn
+
+
+def infer_trace_count() -> int:
+    """Traces of the serving forward alone (kind ``"infer"`` records)."""
+    return sum(1 for r in _TRACE_LOG if r[0] == "infer")
 
 
 def optimizer_cache_key(optimizer) -> tuple:

@@ -5,6 +5,13 @@ same functions lower under the sharding rules (launch/dryrun.py proves it).
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
         --batch 4 --prompt-len 32 --gen 16
+
+:class:`LLMServer` wraps :func:`generate` behind the same
+``repro.serve.BatchingLoop`` the GNN server uses — one queue, one dynamic
+micro-batcher, one set of latency metrics (``llm.latency_ms`` etc.) for
+both stacks. Prompts are padded to pow2 (batch, seq) buckets so steady
+traffic reuses a handful of compiled programs, mirroring the GNN side's
+ShapeBudget rungs.
 """
 from __future__ import annotations
 
@@ -18,12 +25,24 @@ import numpy as np
 from repro.models.transformer import decode_step, init_params, prefill
 from repro.models.transformer.config import ArchConfig
 
+# one jitted decode step per (frozen, hashable) config — re-jitting inside
+# generate() would retrace on every call, which the serving loop forbids
+_STEP_CACHE: dict = {}
+
+
+def _decode_fn(cfg: ArchConfig):
+    fn = _STEP_CACHE.get(cfg)
+    if fn is None:
+        fn = jax.jit(lambda p, t, s: decode_step(p, cfg, t, s))
+        _STEP_CACHE[cfg] = fn
+    return fn
+
 
 def generate(params, cfg: ArchConfig, batch: dict, gen_tokens: int,
              max_seq: int, greedy: bool = True, seed: int = 0):
     """Prefill + autoregressive decode. Returns (B, gen_tokens) int32."""
     logits, state = prefill(params, cfg, batch, max_seq=max_seq)
-    step = jax.jit(lambda p, t, s: decode_step(p, cfg, t, s))
+    step = _decode_fn(cfg)
     key = jax.random.PRNGKey(seed)
     toks = []
     tok = jnp.argmax(logits[:, : cfg.vocab_size], axis=-1).astype(jnp.int32)
@@ -37,6 +56,64 @@ def generate(params, cfg: ArchConfig, batch: dict, gen_tokens: int,
             key, sub = jax.random.split(key)
             tok = jax.random.categorical(sub, logits).astype(jnp.int32)
     return jnp.stack(toks, axis=1)
+
+
+class LLMServer:
+    """Queue-fed token generation over the shared batched-serving loop.
+
+    A request payload is a 1-D int32 prompt; the result is a
+    ``(gen_tokens,)`` int32 array. Drained prompts are right-padded to a
+    pow2 sequence bucket and stacked into a pow2 batch bucket, so the
+    compiled prefill/decode programs are shared across steady traffic.
+    (Token-level results for a short prompt padded into a longer bucket
+    reflect the pad tokens — acceptable for this synthetic-token driver;
+    the bit-parity serving contract lives on the GNN side.)
+    """
+
+    def __init__(self, params, cfg: ArchConfig, *, gen_tokens: int = 16,
+                 max_batch: int = 8, max_wait_s: float = 0.002,
+                 min_seq_pad: int = 8, greedy: bool = True, seed: int = 0,
+                 name: str = "llm"):
+        from repro.serve import BatchingLoop
+        self.params = params
+        self.cfg = cfg
+        self.gen_tokens = int(gen_tokens)
+        self.min_seq_pad = int(min_seq_pad)
+        self.greedy = greedy
+        self.seed = int(seed)
+        self.loop = BatchingLoop(self._dispatch, max_batch=max_batch,
+                                 max_wait_s=max_wait_s, name=name)
+
+    def submit(self, prompt):
+        return self.loop.submit(np.asarray(prompt, np.int32).ravel())
+
+    def pump(self, wait_s=None) -> int:
+        return self.loop.pump(wait_s=wait_s)
+
+    def start(self) -> "LLMServer":
+        self.loop.start()
+        return self
+
+    def stop(self, drain: bool = True) -> None:
+        self.loop.stop(drain=drain)
+
+    def _dispatch(self, tickets):
+        from repro.train.budget import next_bucket
+        prompts = [t.payload for t in tickets]
+        bp = next_bucket(len(prompts), 1)
+        sp = next_bucket(max(p.size for p in prompts), self.min_seq_pad)
+        toks = np.zeros((bp, sp), np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, : p.size] = p
+        batch = {"tokens": jnp.asarray(toks)}
+        out = generate(self.params, self.cfg, batch, self.gen_tokens,
+                       max_seq=sp + self.gen_tokens + 8,
+                       greedy=self.greedy, seed=self.seed)
+        out = np.asarray(out)
+        return [out[i] for i in range(len(prompts))]
+
+    def stats(self) -> dict:
+        return self.loop.stats()
 
 
 def main() -> None:

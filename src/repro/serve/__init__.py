@@ -1,0 +1,21 @@
+"""repro.serve — online inference: queue, dynamic micro-batcher, tiers.
+
+One batched-serving loop (:class:`BatchingLoop`) shared by the GNN server
+and the transformer driver (repro.launch.serve.LLMServer); a tiered GNN
+prediction server (:class:`GNNServer`) whose fresh path reuses training's
+plan → compiled-forward machinery and whose cold path reads a persisted
+offline full-graph forward (:func:`precompute_embeddings`). Served
+predictions are bit-identical to the offline eval forward; steady-state
+serving never retraces after :meth:`GNNServer.warmup`.
+"""
+from repro.serve.loop import BatchingLoop, RequestQueue, Ticket
+from repro.serve.embeddings import (EmbeddingTable, embeddings_dir,
+                                    load_embeddings, precompute_embeddings)
+from repro.serve.server import GNNServer
+
+__all__ = [
+    "BatchingLoop", "RequestQueue", "Ticket",
+    "EmbeddingTable", "embeddings_dir", "load_embeddings",
+    "precompute_embeddings",
+    "GNNServer",
+]

@@ -220,6 +220,51 @@ class ShapeBudget:
             f"re-buckets (batch_pad={self.batch_pad}, r_max={self.r_max})")
 
     # ------------------------------------------------------------------
+    # Serving buckets (repro.serve): the same compile-once discipline for
+    # online inference micro-batches. Serving has two quantized dimensions:
+    # the padded root count (a pow2 ladder up to the server's max batch,
+    # keyed "serve:<batch_pad>" in ``buckets``) and the padded host-fetch
+    # height u_max of that rung (stored as the rung's second slot, grown
+    # with r_max_headroom exactly like training fetches). Keys are strings,
+    # so serve rungs ride state_dict()/load_state() untouched — a server
+    # restored from a training checkpoint's budget state plans straight
+    # into the warmed shapes and never retraces.
+    # ------------------------------------------------------------------
+
+    def serve_batch_pad(self, batch: int) -> int:
+        """Quantized root count for a serving micro-batch of ``batch``
+        requests: the pow2 rung ≥ max(batch, min_batch_pad). A new rung
+        starts with no fetch bucket (``serve_fetch_pad`` learns it)."""
+        bp = next_bucket(batch, self.min_batch_pad)
+        key = f"serve:{bp}"
+        if key not in self.buckets:
+            self.buckets[key] = [bp, 0]
+            self.probes += 1
+        return bp
+
+    def serve_fetch_pad(self, batch_pad: int, fetch_rows: int) -> int:
+        """Padded host-fetch height (u_max) for rung ``batch_pad``.
+
+        First call on a rung buckets ``fetch_rows × r_max_headroom`` (the
+        warmup probe); later calls reuse the bucket, re-bucketing (counted
+        in ``rebuckets`` — one retrace downstream) only on overflow."""
+        key = f"serve:{int(batch_pad)}"
+        b = self.buckets.setdefault(key, [int(batch_pad), 0])
+        if b[1] == 0:
+            b[1] = next_bucket(int(fetch_rows * max(self.r_max_headroom, 1.0)),
+                               self.min_r_max)
+        elif fetch_rows > b[1]:
+            self.rebuckets += 1
+            b[1] = next_bucket(fetch_rows, b[1] + 1)
+        return int(b[1])
+
+    def serve_rungs(self) -> list:
+        """The learned serve ladder: sorted [(batch_pad, u_max), ...]."""
+        out = [(int(v[0]), int(v[1])) for k, v in self.buckets.items()
+               if isinstance(k, str) and k.startswith("serve:")]
+        return sorted(out)
+
+    # ------------------------------------------------------------------
     # Persistence (repro.checkpoint): a resumed run must reuse the exact
     # buckets of the original run, or its first epoch re-probes/re-traces.
     # ------------------------------------------------------------------
