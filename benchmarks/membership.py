@@ -1,0 +1,170 @@
+"""repro.membership benchmark: the cost of losing a peer.
+
+Two claims get numbers here:
+
+1. **Same-world rejoin is bit-exact and cheap.** A persistent peer death
+   injected mid-epoch is detected through the comm deadline, confirmed by
+   the bounded probe, and recovered by rejoin + resume from the shared
+   epoch-boundary checkpoint. Gates: loss parity vs the fault-free run is
+   exactly 0 (``parity_ok``), and the steady state after recovery has
+   zero retraces (``zero_steady_retraces``). Detection / rebuild / resume
+   phase walls come from the ``membership.*`` spans.
+
+2. **Elastic shrink stays on the loss trajectory.** When the policy
+   shrinks the world to P-1 instead (redistribute), training continues
+   and the final loss lands within ``SHRINK_TOL`` relative of a fresh
+   P-1 baseline — the partition move costs redistribution wall and one
+   recovery retrace, not convergence. The post-recovery steady state is
+   retrace-free here too: the new world's shapes are traced once.
+
+Writes BENCH_membership.json at the repo root (benchmarks.common.Bench).
+"""
+from __future__ import annotations
+
+import tempfile
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import Bench
+from repro.core import distributed as engine
+from repro.graph import ldg_partition, make_dataset
+from repro.graph.partition import shard_features
+from repro.models.gnn import GNNConfig
+from repro.obs import trace
+from repro.optim import adam
+from repro.resilience import (FaultPlan, FaultSpec, ResiliencePolicy,
+                              RetryPolicy)
+from repro.train import Trainer
+
+EPOCHS = 4
+ITERS = 6
+BATCH = 8
+PARTS = 4
+SHRINK_TOL = 0.35           # relative final-loss gap vs fresh P-1 baseline
+KILL = dict(epoch=2, it=2, shard=1)
+
+
+def _cfg(ds):
+    return GNNConfig(model="sage", num_layers=2, hidden_dim=32,
+                     feature_dim=ds.feature_dim,
+                     num_classes=ds.num_classes, fanout=4)
+
+
+def _policy(mode="rejoin"):
+    return ResiliencePolicy(
+        retry=RetryPolicy(max_retries=2, backoff_s=0.002, deadline_s=5.0),
+        membership_mode=mode, probe_backoff_s=0.001)
+
+
+def _fit(ds, part, owner, local_idx, table, cfg, plan=None, **kw):
+    tr = Trainer(graph=ds.graph, labels=ds.labels, part=part, owner=owner,
+                 local_idx=local_idx, table=table, cfg=cfg,
+                 optimizer=adam(5e-3), merging=False,
+                 train_vertices=ds.train_vertices(), **kw)
+    if plan is not None:
+        with plan.active():
+            stats = tr.fit(epochs=EPOCHS, iters_per_epoch=ITERS,
+                           batch_per_model=BATCH)
+    else:
+        stats = tr.fit(epochs=EPOCHS, iters_per_epoch=ITERS,
+                       batch_per_model=BATCH)
+    return tr, stats
+
+
+def _wall_s(stats):
+    return float(sum(s.time_s for s in stats))
+
+
+def _phase_ms(records):
+    out = {}
+    for r in records:
+        if r.name.startswith("membership."):
+            out[r.name.split(".", 1)[1]] = \
+                out.get(r.name.split(".", 1)[1], 0.0) + r.dur_ns / 1e6
+    return out
+
+
+def run(quick=True):
+    b = Bench("membership")
+    scale = 0.04 if quick else 0.2
+    ds = make_dataset("arxiv", scale=scale, seed=0)
+    part = ldg_partition(ds.graph, PARTS, passes=1)
+    table, owner, local_idx = shard_features(
+        np.asarray(ds.features), part, PARTS)
+    cfg = _cfg(ds)
+
+    # ---- baseline: fault-free, membership plumbing on ----
+    engine.clear_compile_cache()
+    _, st_clean = _fit(ds, part, owner, local_idx, table, cfg,
+                       resilience=_policy())
+    clean_wall = _wall_s(st_clean)
+    b.emit("clean", "wall_s", round(clean_wall, 2))
+    b.emit("clean", "final_loss", round(float(st_clean[-1].loss), 4))
+
+    # ---- 1. same-world rejoin: bit parity + phase walls ----
+    with tempfile.TemporaryDirectory() as td:
+        fp = FaultPlan([FaultSpec("peer_death", **KILL)])
+        engine.clear_compile_cache()
+        trace.clear()
+        trace.enable()
+        try:
+            tr_r, st_r = _fit(ds, part, owner, local_idx, table, cfg,
+                              plan=fp, resilience=_policy(),
+                              ckpt_dir=str(Path(td) / "ck"))
+            phases = _phase_ms(trace.records())
+        finally:
+            trace.disable()
+    parity = float(np.max(np.abs(
+        np.array([s.loss for s in st_r])
+        - np.array([s.loss for s in st_clean]))))
+    steady_retraces = sum(s.traces for s in st_r[KILL["epoch"] + 1:])
+    b.emit("rejoin", "faults_fired", fp.fired_count())
+    b.emit("rejoin", "recoveries", tr_r.membership_recoveries)
+    b.emit("rejoin", "generation", tr_r.membership.generation)
+    b.emit("rejoin", "wall_s", round(_wall_s(st_r), 2))
+    b.emit("rejoin", "recovery_wall_ratio",
+           round(_wall_s(st_r) / clean_wall, 3))
+    for name in ("detect", "rebuild", "resume"):
+        b.emit("rejoin", f"{name}_ms", round(phases.get(name, 0.0), 3))
+    b.emit("rejoin", "steady_retraces_after_recovery", steady_retraces)
+    b.emit("parity", "loss_dmax_rejoin_vs_clean", parity)
+
+    # ---- 2. elastic shrink (redistribute) vs fresh P-1 baseline ----
+    fp_s = FaultPlan([FaultSpec("peer_death", **KILL)])
+    engine.clear_compile_cache()
+    tr_s, st_s = _fit(ds, part, owner, local_idx, table, cfg, plan=fp_s,
+                      resilience=_policy(mode="redistribute"))
+    part3 = ldg_partition(ds.graph, PARTS - 1, passes=1)
+    t3, o3, l3 = shard_features(np.asarray(ds.features), part3, PARTS - 1)
+    engine.clear_compile_cache()
+    _, st_b = _fit(ds, part3, o3, l3, t3, cfg, resilience=_policy())
+    shrink_gap = abs(float(st_s[-1].loss) - float(st_b[-1].loss)) \
+        / max(abs(float(st_b[-1].loss)), 1e-6)
+    shrink_retraces = sum(s.traces for s in st_s[KILL["epoch"] + 1:])
+    b.emit("shrink", "world_size_after", tr_s.num_shards)
+    b.emit("shrink", "recoveries", tr_s.membership_recoveries)
+    b.emit("shrink", "wall_s", round(_wall_s(st_s), 2))
+    b.emit("shrink", "final_loss", round(float(st_s[-1].loss), 4))
+    b.emit("shrink", "baseline_p3_final_loss",
+           round(float(st_b[-1].loss), 4))
+    b.emit("shrink", "final_loss_rel_gap", round(shrink_gap, 4))
+    b.emit("shrink", "steady_retraces_after_recovery", shrink_retraces)
+
+    # ---- gates ----
+    b.emit("summary", "parity_ok", int(parity == 0.0))
+    b.emit("summary", "recovered_without_intervention",
+           int(tr_r.membership_recoveries >= 1
+               and tr_s.membership_recoveries >= 1))
+    b.emit("summary", "zero_steady_retraces",
+           int(steady_retraces == 0 and shrink_retraces == 0))
+    b.emit("summary", "shrink_tol", SHRINK_TOL)
+    b.emit("summary", "shrink_within_tolerance",
+           int(shrink_gap <= SHRINK_TOL))
+    b.save_csv()
+    b.save_json()
+    return b
+
+
+if __name__ == "__main__":
+    run()

@@ -15,7 +15,7 @@ import traceback
 
 SUITES = ["alpha", "locality", "comm_volume", "end_to_end", "ablation",
           "merging", "sensitivity", "accuracy", "roofline", "planning",
-          "cache", "features", "resilience", "obs", "serve"]
+          "cache", "features", "resilience", "obs", "serve", "membership"]
 
 
 def main() -> None:

@@ -143,10 +143,57 @@ def _save_checkpoint(directory, step, tree, extra, keep) -> Path:
     _fsync_dir(directory)
 
     # previous checkpoints survive until here — the new one is durable now
-    for old in sorted(directory.glob("step-*.npz"))[:-keep]:
-        old.unlink(missing_ok=True)
-        old.with_suffix(".json").unlink(missing_ok=True)
+    gc_checkpoints(directory, keep)
     return final
+
+
+# Test seam: called with the step id between a checkpoint's manifest and
+# npz deletions, so a kill-during-GC test can stop the process at the
+# worst possible instant (see tests). Never set outside tests.
+_GC_FAULT_HOOK = None
+
+
+def gc_checkpoints(directory: str | Path, keep: int) -> list[int]:
+    """Keep-last-``keep`` retention sweep; returns the steps deleted.
+
+    Crash-safe by ordering, not by locking:
+
+    * the step ``latest`` points at is never deleted, even if an odd
+      ``keep`` computation would drop it — resume-by-pointer always works;
+    * within one checkpoint the **manifest is deleted before the npz**: a
+      kill between the two leaves an npz-only orphan, which
+      :func:`valid_steps`/:func:`load_checkpoint` already treat as
+      incomplete (newest-durable fallback keeps working mid-GC) and which
+      the *next* sweep deletes — the glob is npz-driven, so the reverse
+      order would strand manifest orphans forever;
+    * deletion proceeds oldest-first, so an interrupted sweep has only
+      removed the checkpoints least worth keeping.
+
+    ``keep <= 0`` disables retention (nothing is deleted)."""
+    directory = Path(directory)
+    if keep <= 0:
+        return []
+    keep_set = set(valid_steps(directory)[-keep:])
+    pinned = latest_step(directory)
+    if pinned is not None:
+        keep_set.add(pinned)
+    deleted: list[int] = []
+    for p in sorted(directory.glob("step-*.npz")):
+        try:
+            step = int(p.stem.split("-")[1])
+        except (IndexError, ValueError):
+            continue
+        if step in keep_set:
+            continue
+        p.with_suffix(".json").unlink(missing_ok=True)
+        if _GC_FAULT_HOOK is not None:
+            _GC_FAULT_HOOK(step)
+        p.unlink(missing_ok=True)
+        deleted.append(step)
+    if deleted:
+        _fsync_dir(directory)
+        _obs_metrics.inc("ckpt.gc_deleted", len(deleted))
+    return deleted
 
 
 def latest_step(directory: str | Path) -> Optional[int]:

@@ -153,6 +153,17 @@ class ShardComm:
     def mean_scalar(self, x):
         return jax.lax.pmean(x, self.axis)
 
+    # -- membership hooks (repro.membership). On a real deployment the RPC
+    # layer reports per-peer liveness; here a peer's death is registered
+    # process-wide so every comm boundary sees the same world view.
+    @staticmethod
+    def kill(shard: int) -> None:
+        kill_peer(shard)
+
+    @staticmethod
+    def revive(shard: int) -> None:
+        revive_peer(shard)
+
 
 class EmulatedComm:
     """Single-device emulation over globally-stacked arrays (leading N axis).
@@ -204,6 +215,17 @@ class EmulatedComm:
 
     def grad_mean_global(self, grads_g, denom: float):
         return jax.tree.map(lambda g: jnp.sum(g, axis=0) / denom, grads_g)
+
+    # -- membership hooks: identical semantics to ShardComm's (the single
+    # process stands in for the whole fabric, so both backends share the
+    # module-level dead-peer registry).
+    @staticmethod
+    def kill(shard: int) -> None:
+        kill_peer(shard)
+
+    @staticmethod
+    def revive(shard: int) -> None:
+        revive_peer(shard)
 
 
 # ---------------------------------------------------------------------------
@@ -473,12 +495,67 @@ def set_comm_fault_hook(hook: Optional[Callable]) -> None:
     _COMM_FAULT_HOOK = hook
 
 
+# Dead-peer registry (repro.membership). On a real multi-host deployment
+# liveness comes from the RPC layer (a peer's channel errors out); in this
+# single-process harness a death is registered here — by the `peer_death`
+# fault kind, a membership test, or a comm backend's .kill() hook — and
+# every subsequent dispatch that would contact the fabric raises
+# PeerDeadError from the host staging boundary. The raise is pre-donation
+# (safe to retry) and persistent (the peer stays dead until revive_peer),
+# so a guarded caller's retries exhaust into the detector's CommTimeout
+# with the peer attributed — exactly the signal repro.membership consumes.
+_DEAD_PEERS: set = set()
+
+
+class PeerDeadError(RuntimeError):
+    """An exchange addressed a peer registered as dead.
+
+    Typed transient for the retry guard (repro.resilience.comm retries it
+    alongside TransientCommError): the *probe* decides permanence, not the
+    raise — a flapping peer that comes back mid-retry is absorbed with no
+    membership change."""
+
+    def __init__(self, msg: str, *, peer: int = -1):
+        super().__init__(msg)
+        self.site = "comm"
+        self.peer = int(peer)
+
+
+def kill_peer(shard: int) -> None:
+    """Register ``shard`` as dead; every later dispatch fails until
+    :func:`revive_peer`."""
+    _DEAD_PEERS.add(int(shard))
+
+
+def revive_peer(shard: int) -> None:
+    _DEAD_PEERS.discard(int(shard))
+
+
+def peer_is_dead(shard: int) -> bool:
+    return int(shard) in _DEAD_PEERS
+
+
+def dead_peers() -> frozenset:
+    return frozenset(_DEAD_PEERS)
+
+
 def comm_fault_point(plan) -> None:
     """Run the comm-boundary hook for one iteration dispatch (pre-donation).
-    Called by :func:`prepare_iteration_args` and the stacked dispatch."""
+    Called by :func:`prepare_iteration_args` and the stacked dispatch.
+
+    The hook runs first (a scheduled ``peer_death`` fault registers the
+    kill here), then the dead-peer registry is consulted: a dispatch stages
+    exchanges with *every* peer, so any registered death fails the staging
+    with the peer attributed."""
     hook = _COMM_FAULT_HOOK
     if hook is not None:
         hook(plan)
+    if _DEAD_PEERS:
+        peer = min(_DEAD_PEERS)
+        ei = getattr(plan, "epoch_it", (-1, -1))
+        raise PeerDeadError(
+            f"peer shard {peer} is dead at (epoch {ei[0]}, it {ei[1]}); "
+            "exchange fan-out cannot be staged", peer=peer)
 
 
 # (num_shards, feature_dim, dtype) -> (N, 0, d) device zeros. Cache-off

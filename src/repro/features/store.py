@@ -260,6 +260,54 @@ class FeatureStore:
         self.local_idx = np.asarray(local_idx)
         return self
 
+    def _reconstruct_source(self) -> np.ndarray:
+        """Global feature rows recovered from the current backing through
+        the bound owner/local_idx maps (crc-verified reads, patches
+        honored). The reshard fallback when no authoritative source is
+        attached."""
+        if self.owner is None or self.local_idx is None:
+            raise ValueError("reshard needs an attached source or bound "
+                             "owner/local_idx maps (FeatureStore.bind)")
+        n = int(self.owner.size)
+        out = np.empty((n, self.feature_dim), self.dtype)
+        for s in range(self.num_shards):
+            ids = np.flatnonzero(self.owner == s)
+            if ids.size:
+                out[ids] = self._read_backing(
+                    s, self.local_idx[ids].astype(np.int64))
+        return out
+
+    def reshard(self, part: np.ndarray, num_shards: int, *,
+                directory: Optional[str] = None) -> "FeatureStore":
+        """Rebuild the tier chain for a new world view (repro.membership).
+
+        After a confirmed peer death the survivors re-own the dead shard's
+        vertices (``graph.partition.reassign_partition``) and every tier
+        must be rebuilt for the new ``(part, num_shards)``: new rectangular
+        backing, fresh hot tiers, fresh crc sidecars. Rows come from the
+        authoritative source when one is attached — the same
+        repair-from-source path disk corruption uses; on a real deployment
+        this is the shared feature store the dead worker's rows survive
+        in — otherwise the global rows are reconstructed from the *current*
+        backing through the bound owner/local_idx maps, the single-process
+        stand-in for survivors re-reading their local tiers.
+
+        Returns a new bound store with the same host budget. ``directory``
+        spills the new backing to disk — pass a fresh per-generation
+        directory; the old shard files stay mapped until the old store is
+        dropped."""
+        src = self._source if self._source is not None \
+            else self._reconstruct_source()
+        st = FeatureStore.build(
+            np.asarray(src), np.asarray(part), int(num_shards),
+            directory=directory,
+            host_budget_bytes=self.host_budget_bytes,
+            checksums=self.checksums_enabled,
+            crc_chunk_rows=self.crc_chunk_rows or 1024)
+        if self._source is not None and st._source is None:
+            st.attach_source(self._source)
+        return st
+
     # ------------------------------------------------------------------
     # Introspection
     # ------------------------------------------------------------------

@@ -112,6 +112,53 @@ def partition_sizes(part: np.ndarray, parts: int) -> np.ndarray:
     return np.bincount(part, minlength=parts)
 
 
+def reassign_partition(part: np.ndarray, dead: int, *,
+                       parts: int | None = None,
+                       mode: str = "redistribute",
+                       adopter: int | None = None) -> np.ndarray:
+    """Re-own a dead shard's vertices among the survivors (repro.membership).
+
+    Returns a new ``(n,)`` int32 part array over ``parts - 1`` shards,
+    with shard ids **compacted**: a survivor ``p`` keeps its id if
+    ``p < dead`` and becomes ``p - 1`` otherwise, so the result is a dense
+    ``[0, parts-1)`` labeling (what ``local_index_map``/``shard_features``
+    require). The rebuild is a pure function of ``(part, dead, mode,
+    adopter)`` — every survivor computes the same new world without
+    coordination, which is what makes the recovery barrier deterministic.
+
+    * ``mode="redistribute"`` — the lost vertices are dealt round-robin
+      (in global-id order) across all survivors, preserving balance.
+    * ``mode="adopt"`` — one survivor takes the whole shard: ``adopter``
+      if given, else the smallest survivor (ties to the lowest id).
+      Simpler bookkeeping (other survivors' locals are untouched), at the
+      cost of imbalance.
+    """
+    part = np.asarray(part)
+    P = int(parts) if parts is not None else int(part.max()) + 1
+    if P < 2:
+        raise ValueError("cannot reassign with fewer than 2 shards")
+    if not 0 <= dead < P:
+        raise ValueError(f"dead shard {dead} out of range [0, {P})")
+    survivors = [p for p in range(P) if p != dead]
+    lost = np.nonzero(part == dead)[0]
+    new_part = part.astype(np.int32).copy()
+    if mode == "redistribute":
+        targets = np.asarray(survivors, dtype=np.int32)
+        new_part[lost] = targets[np.arange(lost.size) % targets.size]
+    elif mode == "adopt":
+        if adopter is None:
+            sizes = partition_sizes(part, P)
+            adopter = min(survivors, key=lambda p: (sizes[p], p))
+        if adopter == dead or not 0 <= adopter < P:
+            raise ValueError(f"adopter {adopter} is not a survivor")
+        new_part[lost] = adopter
+    else:
+        raise ValueError(f"unknown reassign mode {mode!r}")
+    # compact: close the dead shard's id gap so the world is dense again
+    new_part[new_part > dead] -= 1
+    return new_part
+
+
 def local_index_map(part: np.ndarray, parts: int) -> tuple[np.ndarray, np.ndarray, int]:
     """Global-id -> (owner, local index) maps for a partitioned feature store.
 

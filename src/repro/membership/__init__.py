@@ -1,0 +1,30 @@
+"""repro.membership — elastic multi-host membership for feature-centric
+training.
+
+Survive the death of a *peer shard* — the failure mode single-process
+resilience (PR 7) cannot absorb, because LeapGNN pins features to workers
+and a dead peer takes a slice of the data plane with it. Three layers:
+
+* **Detection** (:mod:`.detector`): the existing ``resilient_call``
+  deadline attributes a ``CommTimeout`` to a peer (``peer_of``); a bounded
+  :class:`PeerProbe` separates a real death from a flap.
+* **View** (:mod:`.view`): :class:`MembershipView` tracks per-shard
+  liveness and an epoch-stamped **generation**; plans are stamped with the
+  generation they were built under and :class:`StaleGeneration` refuses
+  old-world plans at dispatch boundaries.
+* **Re-ownership** (:mod:`.recovery`): :func:`rebuild_world` computes the
+  survivors' new ``part``/``owner``/``local_idx`` deterministically (no
+  coordination service needed); the Trainer rebuilds feature tiers /
+  budgets / caches against it and resumes from the shared crash-atomic
+  checkpoint. Same-world-size rejoin is bit-identical to the fault-free
+  run; elastic shrink is gated on loss-curve tolerance.
+"""
+from repro.membership.detector import PeerProbe, ProbeResult, peer_of
+from repro.membership.recovery import WorldRebuild, rebuild_world
+from repro.membership.view import MembershipView, StaleGeneration
+
+__all__ = [
+    "MembershipView", "StaleGeneration",
+    "PeerProbe", "ProbeResult", "peer_of",
+    "WorldRebuild", "rebuild_world",
+]

@@ -16,17 +16,21 @@ fault tolerance:
   ``(epoch, it)`` attached), :class:`ResiliencePolicy`, and the
   degradation ladder contract (pipeline→sync, cache→off, hot-tier→
   resident; every rung bit-identical).
-* :mod:`~repro.resilience.comm` — deadline + bounded-retry + exponential
-  backoff around the host comm boundary, with per-epoch counters.
+* :mod:`~repro.resilience.comm` — deadline + bounded-retry + jittered
+  exponential backoff around the host comm boundary, with per-epoch
+  counters and peer attribution on timeouts (the membership layer's
+  death-suspicion signal — see repro.membership).
 
 Recovery invariant (the headline gate, CI-enforced): under a recoverable
 FaultPlan training completes with losses and parameters bit-identical to
 the fault-free run, with zero steady-state retraces.
 """
-from repro.resilience.comm import CommCounters, CommTimeout, RetryPolicy, \
-    resilient_call
-from repro.resilience.faults import (ChaosPlan, FaultPlan, FaultSpec,
-                                     InjectedFault, InjectedThreadError,
+from repro.core.distributed import PeerDeadError
+from repro.resilience.comm import (CommCounters, CommTimeout, RetryPolicy,
+                                   backoff_schedule, resilient_call)
+from repro.resilience.faults import (CHAOS_KINDS, ChaosPlan, FaultPlan,
+                                     FaultSpec, InjectedFault,
+                                     InjectedThreadError,
                                      TransientCommError, active_plan)
 from repro.resilience.supervisor import (BackgroundError,
                                          CheckpointRollbackExhausted,
@@ -34,9 +38,11 @@ from repro.resilience.supervisor import (BackgroundError,
                                          StallError, ThreadSupervisor)
 
 __all__ = [
-    "FaultPlan", "FaultSpec", "ChaosPlan", "active_plan",
+    "FaultPlan", "FaultSpec", "ChaosPlan", "CHAOS_KINDS", "active_plan",
     "InjectedFault", "InjectedThreadError", "TransientCommError",
+    "PeerDeadError",
     "RetryPolicy", "CommCounters", "CommTimeout", "resilient_call",
+    "backoff_schedule",
     "ThreadSupervisor", "BackgroundError", "StallError", "NonFiniteLoss",
     "ResiliencePolicy", "CheckpointRollbackExhausted",
 ]

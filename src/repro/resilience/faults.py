@@ -37,6 +37,14 @@ Fault classes (``FaultSpec.kind``):
   NaN (models numerical divergence / a flipped exponent bit). Detected at
   the next loss-sync window; recovered by rollback to the epoch-start
   snapshot and deterministic replay.
+* ``peer_death``   — a peer shard dies (host crash / network partition of a
+  feature server, the failure mode repro.membership exists for). The spec's
+  ``shard`` is registered in the engine's dead-peer registry at the comm
+  fault point; every subsequent dispatch raises ``PeerDeadError`` until a
+  probe confirms the death and the membership layer recovers (rejoin or
+  elastic re-ownership). With ``transient=True`` the peer merely *flaps*:
+  the first ``drops`` attempts of a guarded dispatch raise PeerDeadError
+  and the retry succeeds with no membership change (what ChaosPlan uses).
 
 Scheduling is exact — ``(epoch, it)`` — and firing is once-only by default
 (``once=True``); a replayed epoch does not re-trip its own fault, which is
@@ -112,8 +120,11 @@ class FaultSpec:
     row: int = 0
     rows: int = 1             # disk_corrupt: contiguous rows scribbled
     delay_s: float = 0.0      # comm_delay / thread_stall
-    drops: int = 1            # comm_drop: failing attempts before success
+    drops: int = 1            # comm_drop / flapping peer_death: failing
+                              # attempts before success
     once: bool = True
+    transient: bool = False   # peer_death: flap (guarded raise) instead of
+                              # registering a persistent kill
 
 
 class FaultPlan:
@@ -199,6 +210,13 @@ class FaultPlan:
         ], seed=seed, name="recoverable")
 
 
+# The chaos whitelist: every kind ChaosPlan can draw. The CI chaos job
+# asserts each of these actually fired at least once over the suite (see
+# tests/conftest.py) — a kind that stops firing means the chaos coverage
+# silently regressed, not that the code got more robust.
+CHAOS_KINDS = ("comm_delay", "comm_drop", "thread_stall", "peer_death")
+
+
 class ChaosPlan(FaultPlan):
     """Low-rate, transient-only background chaos for running whole test
     suites under fault pressure (the CI chaos-smoke job).
@@ -207,9 +225,16 @@ class ChaosPlan(FaultPlan):
     ``(seed, kind, epoch, it)`` — the same run sees the same faults — and
     are restricted to classes that every code path absorbs without
     semantic effect: short comm delays, single-drop exchanges (guarded
-    callers retry; unguarded callers never see drops), and short planner
-    stalls. No corruption, no thread kills, no NaNs: tier-1 assertions
+    callers retry; unguarded callers never see drops), short planner
+    stalls, and flapping peers (``peer_death`` with ``transient=True``: a
+    guarded dispatch sees PeerDeadError once, the retry finds the peer
+    back — the membership detector's false-positive path). No corruption,
+    no thread kills, no NaNs, no *persistent* deaths: tier-1 assertions
     (bit-parity, trace counts) must hold unchanged under this plan.
+
+    ``offered`` counts how many times each kind was *consulted* (fired or
+    not), so the coverage assertion can require fired > 0 only for kinds
+    the suite actually exposed enough draws to.
     """
 
     def __init__(self, seed: int = 0, rate: float = 0.05,
@@ -217,13 +242,26 @@ class ChaosPlan(FaultPlan):
         super().__init__([], seed=seed, name=f"chaos-smoke-{seed}")
         self.rate = float(rate)
         self.max_delay_s = float(max_delay_s)
+        self.offered: dict[str, int] = {k: 0 for k in CHAOS_KINDS}
+
+    def fired_by_kind(self) -> dict[str, int]:
+        out: dict[str, int] = {k: 0 for k in CHAOS_KINDS}
+        with self._lock:
+            for kind, _site, _e, _i in self.fired:
+                out[kind] = out.get(kind, 0) + 1
+        return out
 
     def _hash01(self, kind: str, epoch: int, it: int) -> float:
         # splitmix64-flavoured integer hash -> [0, 1); Python ints with an
-        # explicit 64-bit mask (multiplication is *meant* to wrap)
+        # explicit 64-bit mask (multiplication is *meant* to wrap). The
+        # kind is mixed in via crc32, NOT hash(): str hash is randomized
+        # per process, which would make the chaos schedule differ between
+        # runs of the same seed — the coverage assertion (tests/conftest)
+        # and "same run sees the same faults" both need it stable.
+        import zlib
         mask = (1 << 64) - 1
         x = ((self.seed * 0x9E3779B97F4A7C15) & mask
-             ^ (hash(kind) & 0xFFFFFFFF)
+             ^ (zlib.crc32(kind.encode()) & 0xFFFFFFFF)
              ^ ((epoch & 0xFFFF) << 32)
              ^ (it & 0xFFFFFFFF))
         x = ((x ^ (x >> 30)) * 0xBF58476D1CE4E5B9) & mask
@@ -233,15 +271,21 @@ class ChaosPlan(FaultPlan):
 
     def _take(self, kind: str, epoch: int, it: int,
               site: Optional[str] = None) -> List[FaultSpec]:
-        if kind not in ("comm_delay", "comm_drop", "thread_stall"):
+        if kind not in CHAOS_KINDS:
             return []
+        with self._lock:
+            self.offered[kind] = self.offered.get(kind, 0) + 1
         u = self._hash01(kind, epoch, it)
-        thresh = self.rate * (0.5 if kind == "comm_drop" else 1.0)
+        # drops and flaps raise (absorbed only by guarded retries) — keep
+        # them rarer than the pure-wall-clock delays/stalls
+        thresh = self.rate * (0.5 if kind in ("comm_drop", "peer_death")
+                              else 1.0)
         if u >= thresh:
             return []
         sp = FaultSpec(kind, epoch=epoch, it=it, site=site or "",
                        delay_s=(u / max(thresh, 1e-12)) * self.max_delay_s,
-                       drops=1, once=False)
+                       drops=1, once=False,
+                       transient=(kind == "peer_death"))
         with self._lock:
             self.fired.append((kind, site or "", epoch, it))
         _mark_fired(kind, site or "", epoch, it)
@@ -303,6 +347,24 @@ def fire_comm(epoch: int, it: int) -> None:
             raise TransientCommError(
                 f"injected drop of exchange at (epoch {epoch}, it {it}), "
                 f"attempt {attempt}")
+    for sp in fp._take("peer_death", epoch, it):
+        from repro.core import distributed as engine
+        if sp.transient:
+            # flapping peer: unreachable for the first ``drops`` guarded
+            # attempts, back before the probe would confirm anything.
+            # Unguarded callers never see the raise (same contract as
+            # comm_drop) — the membership layer must treat a recovered
+            # flap as a non-event.
+            if attempt is not None and attempt < sp.drops:
+                raise engine.PeerDeadError(
+                    f"injected peer flap: shard {sp.shard} unreachable at "
+                    f"(epoch {epoch}, it {it}), attempt {attempt}",
+                    peer=sp.shard)
+        else:
+            # persistent death: register the kill; the enclosing
+            # comm_fault_point consults the registry right after the hook
+            # returns, so this same dispatch fails with the peer attributed
+            engine.kill_peer(sp.shard)
 
 
 def sleep_point(kind_site: str, epoch: int, it: int) -> None:

@@ -105,6 +105,16 @@ class ResiliencePolicy:
     #                                  replays/degradations)
     stall_deadline_s: Optional[float] = 60.0   # plan-future wait deadline
     retry: RetryPolicy = dataclasses.field(default_factory=RetryPolicy)
+    # -- membership (repro.membership): what to do about a *peer* dying.
+    # A peer-attributed CommTimeout triggers a bounded liveness re-probe;
+    # a confirmed death recovers per membership_mode: "rejoin" (replacement
+    # worker takes the dead rank — bit-identical resume), "redistribute"
+    # (survivors split the lost shard's vertices — elastic shrink, new
+    # numerics), or "adopt" (one survivor takes the whole shard).
+    membership: bool = True
+    membership_mode: str = "rejoin"
+    probe_attempts: int = 3          # liveness probes before confirming death
+    probe_backoff_s: float = 0.001   # sleep between probes
 
     @classmethod
     def resolve(cls, value) -> Optional["ResiliencePolicy"]:

@@ -8,13 +8,14 @@ offline full-graph forward (:func:`precompute_embeddings`). Served
 predictions are bit-identical to the offline eval forward; steady-state
 serving never retraces after :meth:`GNNServer.warmup`.
 """
-from repro.serve.loop import BatchingLoop, RequestQueue, Ticket
+from repro.serve.loop import (BatchingLoop, RequestQueue,
+                             ServeShutdown, Ticket)
 from repro.serve.embeddings import (EmbeddingTable, embeddings_dir,
                                     load_embeddings, precompute_embeddings)
 from repro.serve.server import GNNServer
 
 __all__ = [
-    "BatchingLoop", "RequestQueue", "Ticket",
+    "BatchingLoop", "RequestQueue", "ServeShutdown", "Ticket",
     "EmbeddingTable", "embeddings_dir", "load_embeddings",
     "precompute_embeddings",
     "GNNServer",

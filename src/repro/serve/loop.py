@@ -30,6 +30,14 @@ from repro.obs import metrics as _metrics
 from repro.obs import trace as _trace
 
 
+class ServeShutdown(RuntimeError):
+    """The serving loop stopped before this ticket was dispatched.
+
+    Raised from ``ticket.wait()`` for every request still queued when
+    :meth:`BatchingLoop.stop` gave up draining — an explicit answer
+    instead of a silently-forever-pending ticket."""
+
+
 class Ticket:
     """One pending request: payload in, result (or error) out."""
 
@@ -116,10 +124,12 @@ class BatchingLoop:
 
     def __init__(self, dispatch: Callable[[Sequence[Ticket]], Sequence],
                  *, max_batch: int = 64, max_wait_s: float = 0.002,
-                 name: str = "serve", qps_window_s: float = 2.0):
+                 name: str = "serve", qps_window_s: float = 2.0,
+                 drain_deadline_s: float = 30.0):
         self.dispatch = dispatch
         self.max_batch = int(max_batch)
         self.max_wait_s = float(max_wait_s)
+        self.drain_deadline_s = float(drain_deadline_s)
         self.name = name
         self.queue = RequestQueue()
         self.served = 0
@@ -209,15 +219,33 @@ class BatchingLoop:
         return self
 
     def stop(self, drain: bool = True) -> None:
+        """Stop the background loop.
+
+        With ``drain`` (default) waits up to ``drain_deadline_s`` (ctor
+        parameter) for the queue to empty first. Any ticket still queued
+        after the loop stops — drain disabled, deadline missed, or
+        submitted during shutdown — is failed with :class:`ServeShutdown`
+        so its ``wait()`` raises promptly instead of timing out."""
         if self._thread is None:
             return
         if drain:
-            deadline = time.perf_counter() + 30.0
+            deadline = time.perf_counter() + self.drain_deadline_s
             while self.queue.depth() and time.perf_counter() < deadline:
                 time.sleep(0.001)
         self._stop.set()
-        self._thread.join(timeout=30.0)
+        self._thread.join(timeout=max(self.drain_deadline_s, 1.0))
         self._thread = None
+        undrained = self.queue.drain(max_n=2**31, wait_s=0.0)
+        if undrained:
+            self.errors += len(undrained)
+            _metrics.inc(f"{self.name}.shutdown_failed", len(undrained))
+            err = ServeShutdown(
+                f"{self.name}: loop stopped with {len(undrained)} "
+                f"request(s) undrained (drain_deadline_s="
+                f"{self.drain_deadline_s})")
+            for t in undrained:
+                t._finish(error=err)
+        _metrics.set_gauge(f"{self.name}.queue_depth", self.queue.depth())
 
     def stats(self) -> dict:
         return {"served": self.served, "batches": self.batches,

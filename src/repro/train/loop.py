@@ -76,6 +76,8 @@ from repro.core.merging import MergingController
 from repro.core.micrograph import hopgnn_assignment
 from repro.core.strategies import IterationPlan, Strategy
 from repro.graph.sampler import sample_tree_block
+from repro.membership import MembershipView, PeerProbe, StaleGeneration, \
+    peer_of
 from repro.models.gnn.models import GNNConfig, gnn_forward, init_gnn
 from repro.obs import metrics as obs_metrics
 from repro.obs.trace import span as obs_span
@@ -139,6 +141,10 @@ class EpochStats:
     crc_failures: int = 0       # backing-tier checksum mismatches this epoch
     repaired_rows: int = 0      # rows re-gathered from the source after a
     #                             quarantined chunk failed verification
+    # --- membership (repro.membership; static world: gen 0, 0 recoveries) ---
+    membership_generation: int = 0   # world generation at epoch end
+    membership_recoveries: int = 0   # confirmed peer deaths recovered while
+    #                                  running this epoch (rejoin or shrink)
 
 
 class Trainer:
@@ -306,6 +312,15 @@ class Trainer:
         self._site_failures: dict = {}     # site -> failures seen this fit
         self._rollbacks_total = 0
         self.degradations_taken: list = []  # cumulative rung log
+        # --- membership (repro.membership): per-shard liveness plus the
+        # epoch-stamped world generation every plan is stamped with (and
+        # refused under when it goes stale — see _dispatch)
+        self.membership = (MembershipView(self.num_shards)
+                           if self.resilience is not None
+                           and self.resilience.membership else None)
+        self.membership_recoveries = 0     # confirmed deaths recovered
+        self._membership_ckpt_loaded = False  # last recovery resumed from
+        #                                       the shared checkpoint
 
     def _make_prefetcher(self):
         from repro.cache import EpochPrefetcher
@@ -402,6 +417,10 @@ class Trainer:
                 for s in range(self.num_shards):
                     self._cache_policy.observe(s, plan.remote_ids[s])
         plan.epoch_it = (epoch, it)   # provenance for the comm fault point
+        # world provenance: the membership generation this plan was built
+        # under; _dispatch refuses the plan once the generation moves on
+        plan.generation = (self.membership.generation
+                           if self.membership is not None else -1)
         if self._uploader is not None:
             # async pipeline: commit the host→device upload here, on the
             # prefetch thread, so plan i+1's transfer overlaps plan i's
@@ -722,6 +741,13 @@ class Trainer:
         then run the dispatch under the comm retry guard. Transient comm
         faults fire during argument staging, BEFORE the compiled program
         is invoked, so a retry never re-donates dead buffers."""
+        if self.membership is not None:
+            # world-stale refusal: a plan (and its committed upload /
+            # prefetched rows) built under an older membership generation
+            # must never reach the device — the replay rebuilds it
+            for p in plans:
+                self.membership.check_generation(
+                    getattr(p, "generation", -1), epoch=epoch, it=it)
         if self._supervisor is not None:
             self._supervisor.check()
         if len(plans) == 1:
@@ -822,6 +848,18 @@ class Trainer:
         # skips) them deterministically at its own boundary
         self._cache_fut = None
         self._readahead_fut = None
+        # membership: a peer-attributed failure goes through detection
+        # first — a confirmed death is a world change, not a site failure
+        if self.membership is not None and policy.membership:
+            peer = peer_of(e)
+            if peer >= 0 and self.membership.is_alive(peer):
+                rung = self._membership_recover(peer, epoch)
+                if rung is not None:
+                    self.degradations_taken.append(rung)
+                    return rung
+                # the probe found the peer alive (a flap): suspicion is
+                # cleared with zero membership trace, and the failure falls
+                # through to the ordinary comm site accounting below
         if isinstance(e, NonFiniteLoss):
             self._rollbacks_total += 1
             if self._rollbacks_total > policy.max_rollbacks:
@@ -838,6 +876,115 @@ class Trainer:
                 self.degradations_taken.append(rung)
             return rung
         return None
+
+    # ------------------------------------------------------------------
+    # Elastic membership (repro.membership)
+    # ------------------------------------------------------------------
+
+    def _membership_recover(self, peer: int, epoch: int) -> Optional[str]:
+        """Two-phase recovery for a peer-attributed failure: suspect →
+        bounded liveness probe. A peer that answers any probe was a flap —
+        the suspicion is cleared and ``None`` returned (the caller replays
+        in-mode, zero numerical trace). A confirmed death rebuilds the
+        world per ``policy.membership_mode`` and resumes from the shared
+        crash-atomic checkpoint; returns the ``membership_<mode>`` rung."""
+        policy = self.resilience
+        view = self.membership
+        view.mark_suspect(peer, epoch=epoch)
+        with obs_span("membership.detect", peer=peer, epoch=epoch):
+            pr = PeerProbe(attempts=policy.probe_attempts,
+                           backoff_s=policy.probe_backoff_s).confirm(peer)
+        if pr.alive:
+            view.clear_suspect(peer)
+            return None
+        view.confirm_dead(peer, epoch=epoch)
+        mode = policy.membership_mode
+        with obs_span("membership.rebuild", peer=peer, mode=mode,
+                      epoch=epoch):
+            if mode == "rejoin":
+                # a replacement worker takes the dead rank: the partition
+                # maps are unchanged and the rank's feature rows come back
+                # from the authoritative source (the emulated backing
+                # already holds them — same repair-from-source path the
+                # crc layer uses), so the world is the old world under a
+                # fresh generation
+                engine.revive_peer(peer)
+                view.rejoin(peer, epoch=epoch)
+            else:
+                self._membership_shrink(peer, epoch, mode)
+        with obs_span("membership.resume", peer=peer, mode=mode,
+                      epoch=epoch):
+            self._membership_ckpt_loaded = self._resume_shared_checkpoint()
+        self.membership_recoveries += 1
+        obs_metrics.inc("membership.recoveries")
+        return f"membership_{mode}"
+
+    def _membership_shrink(self, dead: int, epoch: int, mode: str) -> None:
+        """Elastic re-ownership at world size P-1: survivors re-own the
+        dead shard's vertices (graph.partition.reassign_partition) and
+        every world-shaped structure is rebuilt against the new maps.
+        Numerics legitimately change (different shard batches, different
+        reduction groups), so correctness is gated on loss tolerance vs a
+        fresh same-world-size baseline, not bit parity."""
+        if self.mesh is not None:
+            raise NotImplementedError(
+                "elastic shrink under a real device mesh needs a mesh "
+                "rebuild; use membership_mode='rejoin' on multi-device runs")
+        from repro.membership import rebuild_world
+        wr = rebuild_world(self.part, dead, self.num_shards, mode=mode)
+        # the dead rank leaves the world entirely; the registry entry must
+        # not leak into the compacted id space
+        engine.revive_peer(dead)
+        self.part, self.owner = wr.part, wr.owner
+        self.local_idx = wr.local_idx
+        self.store = self.store.reshard(wr.part, wr.num_shards)
+        self.streamed = not self.store.resident
+        self.table = (jnp.asarray(self.store.as_dense())
+                      if self.store.resident else None)
+        self._empty_cache = None       # the (N, 0, d) table is world-shaped
+        # merge controller: the base rotation assignment is world-shaped;
+        # the §5.3 examination restarts against the new world
+        self.controller = None
+        self._resume_pattern = None
+        # cache layer: rebuilt cold against the new owner map (same row
+        # budget per shard)
+        if self.cache_store is not None:
+            from repro.cache import CacheStore, make_policy
+            from repro.train.budget import next_bucket
+            self.cache_store = CacheStore(
+                self.num_shards, self.store.feature_dim,
+                c_max=next_bucket(self.cache_rows), dtype=self.store.dtype)
+            self._cache_policy = make_policy(
+                self.cache_policy_name, graph=self.graph, owner=self.owner,
+                num_shards=self.num_shards)
+        self._cache_fut = None
+        self._readahead_fut = None
+        self._readahead_enabled = self.streamed and self.store.hot_rows > 0
+        self._cache_prefetcher = (
+            self._make_prefetcher()
+            if self.cache_store is not None or self._readahead_enabled
+            else None)
+        if self._uploader is not None:
+            # ping-pong upload buffers are plan-shaped; rebuild fresh
+            from repro.train.pipeline import PlanUploader
+            self._uploader = PlanUploader(budget=self.budget,
+                                          view=self.membership)
+        self.membership.shrink(dead, epoch=epoch)
+
+    def _resume_shared_checkpoint(self) -> bool:
+        """Reload params/opt from the shared crash-atomic checkpoint — the
+        survivors' common restore point. False when no checkpoint exists
+        yet; the epoch-start snapshot then serves instead (bit-identical to
+        the last checkpoint whenever one exists, because checkpoints are
+        written at the same epoch boundaries the snapshot is taken at)."""
+        if not self.ckpt_dir or latest_step(self.ckpt_dir) is None:
+            return False
+        tree, step, _extra = load_checkpoint(
+            self.ckpt_dir, {"params": self.params, "opt": self.opt_state})
+        self.params = tree["params"]
+        self.opt_state = tree["opt"]
+        self.global_step = step
+        return True
 
     def _attempt_epoch(self, epoch: int, start_epoch: int, epochs: int,
                       iters: int, batch_per_model: int, cache_exec, submit):
@@ -863,7 +1010,7 @@ class Trainer:
         return res, readahead_s, refresh_s
 
     _RECOVERABLE = (BackgroundError, StallError, CommTimeout, NonFiniteLoss,
-                    InjectedFault)
+                    InjectedFault, StaleGeneration)
 
     def _epoch_with_recovery(self, epoch: int, start_epoch: int,
                              epochs: int, iters: int, batch_per_model: int,
@@ -883,6 +1030,7 @@ class Trainer:
         fp = _rfaults.active_plan()
         f0 = fp.fired_count() if fp is not None else 0
         rb0 = self._rollbacks_total
+        mr0 = self.membership_recoveries
         snap = self._snapshot_state()
         attempts = 0
         rungs: list = []
@@ -899,7 +1047,14 @@ class Trainer:
                 rung = self._recover(e, epoch)
                 if rung is not None:
                     rungs.append(rung)
-                self._restore_state(snap)
+                if self._membership_ckpt_loaded:
+                    # membership resumed from the shared checkpoint (== the
+                    # epoch-start state at every epoch boundary); the old
+                    # snapshot may alias a pre-shrink world — re-take it
+                    self._membership_ckpt_loaded = False
+                    snap = self._snapshot_state()
+                else:
+                    self._restore_state(snap)
         fp = _rfaults.active_plan()
         meta = {"epoch_attempts": attempts,
                 "rollbacks": self._rollbacks_total - rb0,
@@ -908,7 +1063,9 @@ class Trainer:
                     (fp.fired_count() if fp is not None else 0) - f0,
                 "comm_retries": self._comm_counters.retries,
                 "comm_timeouts": self._comm_counters.timeouts,
-                "bg_errors": self._supervisor.errors_recorded - bg0}
+                "bg_errors": self._supervisor.errors_recorded - bg0,
+                "membership_recoveries":
+                    self.membership_recoveries - mr0}
         return res, ra, rf, meta
 
     # ------------------------------------------------------------------
@@ -1003,7 +1160,8 @@ class Trainer:
                     it=args[1] if len(args) > 1 else -1)
         if self.pipeline and self._uploader is None:
             from repro.train.pipeline import PlanUploader
-            self._uploader = PlanUploader(budget=self.budget)
+            self._uploader = PlanUploader(budget=self.budget,
+                                          view=self.membership)
         # the cache refresh computation gets its own thread: it must not
         # block the plan double-buffer (and vice versa). The tiered store's
         # readahead forecast shares it (both are epoch-boundary jobs on the
@@ -1071,7 +1229,12 @@ class Trainer:
                                 crc_failures=self.store.stats.crc_failures
                                 - crc0[0],
                                 repaired_rows=self.store.stats.repaired_rows
-                                - crc0[1])
+                                - crc0[1],
+                                membership_generation=(
+                                    self.membership.generation
+                                    if self.membership is not None else 0),
+                                membership_recoveries=rmeta.get(
+                                    "membership_recoveries", 0))
                 stats.append(st)
                 obs_metrics.publish_epoch_stats(st)
                 if log is not None:

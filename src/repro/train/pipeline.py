@@ -79,15 +79,24 @@ class PlanUploader:
     signature exactly when the bucket itself grew.
     """
 
-    def __init__(self, budget=None, strict: bool = False):
+    def __init__(self, budget=None, strict: bool = False, view=None):
         self.budget = budget
         self.strict = strict
+        self.view = view               # MembershipView (world-stale refusal)
         self._sigs: dict = {}          # pattern (num_steps) -> signature
         self._buckets: dict = {}       # pattern -> bucket_shapes snapshot
         self.uploads = 0
         self.shape_changes = 0
 
     def commit(self, plan) -> None:
+        if self.view is not None:
+            # refuse to ship a dead world's bytes to the device: a plan
+            # stamped under an older membership generation must not commit
+            # (repro.membership; the dispatch boundary re-checks, but the
+            # upload is the first place stale buffers would be staged)
+            ei = getattr(plan, "epoch_it", (-1, -1))
+            self.view.check_generation(getattr(plan, "generation", -1),
+                                       epoch=ei[0], it=ei[1])
         expect = None
         if self.budget is not None:
             expect = self.budget.bucket_shapes(plan.num_steps)

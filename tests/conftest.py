@@ -7,20 +7,40 @@ import numpy as np
 import pytest
 
 
+# A chaos kind consulted at least this many times over the suite has seen
+# enough deterministic draws that zero firings means the schedule (or the
+# fault point it feeds) silently regressed, not that the suite got lucky.
+# Tuned against `make test-chaos` (seed 17): every kind is offered
+# thousands of draws and fires double digits; kinds a short custom run
+# barely touches stay exempt.
+_CHAOS_MIN_OFFERED = 500
+
+
 @pytest.fixture(scope="session", autouse=True)
 def chaos_plan():
     """CI chaos-smoke hook: REPRO_CHAOS_SEED=<int> runs the whole suite
     under a transient-only ChaosPlan (deterministic low-rate comm delays,
-    guarded drops, planner stalls). Every tier-1 assertion — bit-parity,
-    trace counts — must hold unchanged; that is the point."""
+    guarded drops, planner stalls, flapping peers). Every tier-1
+    assertion — bit-parity, trace counts — must hold unchanged; that is
+    the point. On teardown the coverage gate requires every chaos kind
+    that was offered enough draws to have actually fired: a kind that
+    stops firing means chaos coverage regressed silently."""
     seed = os.environ.get("REPRO_CHAOS_SEED")
     if not seed:
         yield None
         return
-    from repro.resilience import ChaosPlan
+    from repro.resilience import CHAOS_KINDS, ChaosPlan
     plan = ChaosPlan(seed=int(seed)).install()
     yield plan
     plan.uninstall()
+    fired = plan.fired_by_kind()
+    missing = [k for k in CHAOS_KINDS
+               if plan.offered.get(k, 0) >= _CHAOS_MIN_OFFERED
+               and fired.get(k, 0) == 0]
+    assert not missing, (
+        f"chaos coverage regressed: kinds {missing} were offered "
+        f"{ {k: plan.offered[k] for k in missing} } draws and never "
+        f"fired (fired: {fired})")
 
 
 @pytest.fixture(scope="session")

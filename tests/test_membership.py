@@ -1,0 +1,548 @@
+"""repro.membership: peer-death detection, re-ownership, bit-parity resume.
+
+The headline contracts:
+
+* a persistent ``peer_death`` fault mid-epoch is detected through the comm
+  deadline (CommTimeout carries the peer), confirmed by the bounded probe,
+  and recovered without intervention — same-world-size **rejoin** resumes
+  bit-identical to the fault-free run (losses AND parameters);
+* **elastic shrink** (redistribute/adopt) re-owns the lost shard's
+  vertices deterministically, rebuilds every world-shaped structure, and
+  continues at P-1 within loss tolerance of a fresh P-1 baseline, with
+  zero steady-state retraces after the recovery epoch;
+* plans stamped under an old membership generation are refused at dispatch
+  and upload boundaries (StaleGeneration), the same stale-refusal
+  discipline the cache uses.
+
+Satellites covered here: jittered backoff schedule (deterministic, never
+longer than unjittered), checkpoint keep-last-K GC with crash-safe
+deletion ordering (incl. SIGKILL mid-GC), and the serving loop's bounded
+drain deadline (ServeShutdown instead of forever-pending tickets).
+"""
+import json
+import subprocess
+import sys
+import textwrap
+import threading
+import time
+import types
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import distributed as engine
+from repro.membership import (MembershipView, PeerProbe, StaleGeneration,
+                              peer_of, rebuild_world)
+from repro.models.gnn import GNNConfig
+from repro.optim import adam
+from repro.resilience import (CommTimeout, FaultPlan, FaultSpec,
+                              PeerDeadError, ResiliencePolicy, RetryPolicy,
+                              backoff_schedule, resilient_call)
+from repro.train import Trainer
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+@pytest.fixture(autouse=True)
+def _clean_registry():
+    """The dead-peer registry is process-global; a test that kills a peer
+    and fails before recovery must not poison its neighbours."""
+    yield
+    for p in list(engine.dead_peers()):
+        engine.revive_peer(p)
+
+
+def _cfg(d):
+    return GNNConfig(model="sage", num_layers=2, hidden_dim=16,
+                     feature_dim=d["ds"].feature_dim,
+                     num_classes=d["ds"].num_classes, fanout=4)
+
+
+def _trainer(d, cfg, **kw):
+    kw.setdefault("optimizer", adam(5e-3))
+    kw.setdefault("merging", False)
+    kw.setdefault("train_vertices", d["ds"].train_vertices())
+    return Trainer(graph=d["ds"].graph, labels=d["ds"].labels,
+                   part=d["part"], owner=d["owner"],
+                   local_idx=d["local_idx"], table=d["table"], cfg=cfg, **kw)
+
+
+def _losses(stats):
+    return [s.loss for s in stats]
+
+
+def _assert_params_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _policy(mode="rejoin", retries=2):
+    return ResiliencePolicy(
+        retry=RetryPolicy(max_retries=retries, backoff_s=0.001,
+                          deadline_s=5.0),
+        membership_mode=mode, probe_backoff_s=0.0)
+
+
+# ---------------------------------------------------------------------------
+# MembershipView + generation discipline
+# ---------------------------------------------------------------------------
+
+def test_view_state_machine():
+    v = MembershipView(4)
+    assert v.world_size() == 4 and v.generation == 0
+    v.mark_suspect(2, epoch=1)
+    assert v.is_suspect(2) and v.is_alive(2)
+    assert v.generation == 0          # suspicion never bumps the world
+    v.clear_suspect(2)
+    assert not v.is_suspect(2)
+    g = v.confirm_dead(2, epoch=1)
+    assert g == 1 and not v.is_alive(2) and v.world_size() == 3
+    assert v.alive_shards() == [0, 1, 3]
+    assert v.confirm_dead(2, epoch=1) == 1    # idempotent
+    assert v.rejoin(2, epoch=1) == 2
+    assert v.is_alive(2) and v.world_size() == 4
+    v.confirm_dead(3, epoch=2)
+    assert v.shrink(3, epoch=2) == 4
+    assert v.num_shards == 3 and v.world_size() == 3
+    kinds = [e[0] for e in v.events]
+    assert kinds == ["suspect", "dead", "rejoin", "dead", "shrink"]
+
+
+def test_stale_generation_refused():
+    v = MembershipView(4)
+    v.check_generation(-1, epoch=0, it=0)     # unstamped passes
+    v.check_generation(0, epoch=0, it=0)      # current passes
+    v.confirm_dead(1, epoch=0)
+    with pytest.raises(StaleGeneration) as ei:
+        v.check_generation(0, epoch=0, it=3)
+    assert ei.value.have == 0 and ei.value.want == 1
+    assert ei.value.site == "membership"
+
+
+def test_shrink_one_shard_world_rejected():
+    v = MembershipView(1)
+    with pytest.raises(ValueError):
+        v.shrink(0)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic re-ownership (graph.partition.reassign_partition)
+# ---------------------------------------------------------------------------
+
+def test_reassign_redistribute_is_deterministic_and_balanced():
+    from repro.graph.partition import reassign_partition
+    rng = np.random.default_rng(0)
+    part = rng.integers(0, 4, size=1000).astype(np.int32)
+    a = reassign_partition(part, 1, mode="redistribute")
+    b = reassign_partition(part, 1, mode="redistribute")
+    np.testing.assert_array_equal(a, b)       # pure function of inputs
+    assert a.min() >= 0 and a.max() <= 2      # compacted to 3 shards
+    # survivors keep every vertex they already owned (modulo compaction)
+    old = part.copy()
+    old[old > 1] -= 1
+    keep = part != 1
+    np.testing.assert_array_equal(a[keep], old[keep])
+    # the lost vertices spread across survivors within one of each other
+    lost_counts = np.bincount(a[part == 1], minlength=3)
+    assert lost_counts.max() - lost_counts.min() <= 1
+
+
+def test_reassign_adopt_and_errors():
+    from repro.graph.partition import reassign_partition
+    rng = np.random.default_rng(1)
+    part = rng.integers(0, 4, size=500).astype(np.int32)
+    sizes = np.bincount(part, minlength=4)
+    smallest = int(np.argmin(np.where(np.arange(4) == 2, np.iinfo(int).max,
+                                      sizes)))
+    a = reassign_partition(part, 2, mode="adopt")
+    old = part.copy()
+    old[old > 2] -= 1
+    tgt = smallest if smallest < 2 else smallest - 1
+    assert set(a[part == 2]) == {tgt}         # one adopter takes the shard
+    with pytest.raises(ValueError):
+        reassign_partition(part, 2, mode="nope")
+    with pytest.raises(ValueError):
+        reassign_partition(part, 2, mode="adopt", adopter=2)
+    with pytest.raises(ValueError):
+        reassign_partition(part, 7)
+
+
+def test_rebuild_world_maps_are_consistent():
+    rng = np.random.default_rng(2)
+    part = rng.integers(0, 4, size=800).astype(np.int32)
+    wr = rebuild_world(part, 3, 4, mode="redistribute")
+    assert wr.num_shards == 3 and wr.dead == 3
+    np.testing.assert_array_equal(wr.owner, wr.part.astype(wr.owner.dtype))
+    # local_idx is a dense 0..size-1 numbering within each shard
+    for s in range(3):
+        rows = np.sort(wr.local_idx[wr.part == s])
+        np.testing.assert_array_equal(rows, np.arange(rows.size))
+    assert wr.moved_rows >= int((part == 3).sum())
+    with pytest.raises(ValueError):
+        rebuild_world(part, 3, 4, mode="rejoin")
+
+
+# ---------------------------------------------------------------------------
+# Detection: attribution, probe, timeout plumbing
+# ---------------------------------------------------------------------------
+
+def test_peer_of_walks_cause_chain():
+    try:
+        try:
+            raise PeerDeadError("inner", peer=3)
+        except PeerDeadError as inner:
+            raise CommTimeout("outer") from inner
+    except CommTimeout as e:
+        assert peer_of(e) == 3
+    assert peer_of(RuntimeError("no peer")) == -1
+    assert peer_of(CommTimeout("stamped", peer=1)) == 1
+
+
+def test_probe_confirms_death_and_clears_flap():
+    engine.kill_peer(2)
+    try:
+        pr = PeerProbe(attempts=3, backoff_s=0.0).confirm(2)
+        assert not pr.alive and pr.attempts == 3
+    finally:
+        engine.revive_peer(2)
+    pr = PeerProbe(attempts=3, backoff_s=0.0).confirm(2)
+    assert pr.alive and pr.attempts == 1      # first answer clears it
+
+
+def test_dead_peer_timeout_carries_attribution():
+    engine.kill_peer(1)
+    plan = types.SimpleNamespace(epoch_it=(0, 0))
+    try:
+        with pytest.raises(CommTimeout) as ei:
+            resilient_call(lambda: engine.comm_fault_point(plan),
+                           policy=RetryPolicy(max_retries=1,
+                                              backoff_s=0.0001),
+                           epoch=0, it=0)
+        assert ei.value.peer == 1
+    finally:
+        engine.revive_peer(1)
+    # registry empty again: the same call now succeeds
+    assert engine.comm_fault_point(plan) is None
+
+
+# ---------------------------------------------------------------------------
+# Backoff jitter (satellite: decorrelation)
+# ---------------------------------------------------------------------------
+
+def test_backoff_schedule_is_deterministic_and_bounded():
+    pol = RetryPolicy(max_retries=4, backoff_s=0.01, backoff_mult=2.0,
+                      jitter=0.5, seed=3)
+    a = backoff_schedule(pol, epoch=1, it=2)
+    b = backoff_schedule(pol, epoch=1, it=2)
+    assert a == b and len(a) == 4             # pure function of coords
+    plain = [0.01 * 2.0 ** k for k in range(4)]
+    for got, base in zip(a, plain):
+        assert base * 0.5 <= got <= base      # never longer than unjittered
+    assert a != backoff_schedule(pol, epoch=1, it=3)   # decorrelated
+    other = backoff_schedule(RetryPolicy(max_retries=4, backoff_s=0.01,
+                                         backoff_mult=2.0, jitter=0.5,
+                                         seed=4), epoch=1, it=2)
+    assert a != other                          # per-shard seeds decorrelate
+    nojit = RetryPolicy(max_retries=4, backoff_s=0.01, backoff_mult=2.0,
+                        jitter=0.0)
+    assert backoff_schedule(nojit, epoch=1, it=2) == plain
+
+
+# ---------------------------------------------------------------------------
+# FeatureStore re-ownership
+# ---------------------------------------------------------------------------
+
+def test_feature_store_reshard_serves_identical_rows(partitioned):
+    from repro.features import FeatureStore
+    d = partitioned
+    store = FeatureStore.from_array(d["table"], owner=d["owner"],
+                                    local_idx=d["local_idx"])
+    wr = rebuild_world(d["part"], 1, d["parts"], mode="redistribute")
+    st2 = store.reshard(wr.part, wr.num_shards)
+    assert st2.num_shards == d["parts"] - 1
+    ids = np.arange(d["part"].shape[0])
+    np.testing.assert_array_equal(store.take_global(ids),
+                                  st2.take_global(ids))
+
+
+# ---------------------------------------------------------------------------
+# End-to-end recovery (the tentpole gates)
+# ---------------------------------------------------------------------------
+
+def test_peer_death_rejoin_is_bit_identical(partitioned, tmp_path):
+    """Persistent peer death mid-epoch: detected via the comm deadline,
+    confirmed by the probe, recovered by rejoin + resume from the shared
+    checkpoint — losses and parameters bit-identical to fault-free."""
+    d = partitioned
+    clean_tr = _trainer(d, _cfg(d), resilience=_policy())
+    clean_stats = clean_tr.fit(epochs=3, iters_per_epoch=4,
+                               batch_per_model=8)
+    fp = FaultPlan([FaultSpec("peer_death", epoch=2, it=1, shard=1)])
+    tr = _trainer(d, _cfg(d), resilience=_policy(),
+                  ckpt_dir=str(tmp_path / "ck"))
+    with fp.active():
+        stats = tr.fit(epochs=3, iters_per_epoch=4, batch_per_model=8)
+    assert fp.fired_count() == 1
+    assert _losses(stats) == _losses(clean_stats)
+    _assert_params_equal(tr, clean_tr)
+    assert tr.membership_recoveries == 1
+    assert tr.degradations_taken == ["membership_rejoin"]
+    # death + rejoin = two world transitions
+    assert tr.membership.generation == 2
+    assert stats[2].epoch_attempts == 2
+    assert stats[2].membership_recoveries == 1
+    assert stats[2].membership_generation == 2
+    assert engine.dead_peers() == frozenset()
+    # epoch 1's checkpoint existed, so the resume came from shared storage
+    assert stats[2].comm_timeouts >= 1        # detection went via deadline
+
+
+def test_peer_death_rejoin_without_checkpoint(partitioned):
+    """No ckpt_dir: the epoch-start snapshot is the restore point and the
+    recovery is still bit-identical (snapshot == last checkpoint state)."""
+    d = partitioned
+    clean_tr = _trainer(d, _cfg(d), resilience=_policy())
+    clean_stats = clean_tr.fit(epochs=2, iters_per_epoch=4,
+                               batch_per_model=8)
+    fp = FaultPlan([FaultSpec("peer_death", epoch=1, it=2, shard=2)])
+    tr = _trainer(d, _cfg(d), resilience=_policy())
+    with fp.active():
+        stats = tr.fit(epochs=2, iters_per_epoch=4, batch_per_model=8)
+    assert _losses(stats) == _losses(clean_stats)
+    _assert_params_equal(tr, clean_tr)
+    assert tr.degradations_taken == ["membership_rejoin"]
+
+
+@pytest.mark.parametrize("mode", ["redistribute", "adopt"])
+def test_peer_death_elastic_shrink(partitioned, small_dataset, mode):
+    """Elastic shrink: the world compacts to P-1 mid-run, training
+    continues within loss tolerance of a fresh P-1 baseline, and the
+    steady state after the recovery epoch has zero retraces."""
+    d = partitioned
+    fp = FaultPlan([FaultSpec("peer_death", epoch=1, it=2, shard=1)])
+    tr = _trainer(d, _cfg(d), resilience=_policy(mode=mode))
+    with fp.active():
+        stats = tr.fit(epochs=4, iters_per_epoch=4, batch_per_model=8)
+    assert tr.num_shards == d["parts"] - 1
+    assert tr.degradations_taken == [f"membership_{mode}"]
+    assert tr.membership.generation == 2       # death + shrink
+    assert engine.dead_peers() == frozenset()
+    assert all(np.isfinite(s.loss) for s in stats)
+    # training still converges at the new world size
+    assert stats[-1].loss < stats[0].loss
+    # zero steady-state retraces once the new world's shapes are traced
+    assert stats[-1].traces == 0
+    # loss tolerance vs a fresh same-world-size baseline
+    from repro.graph import ldg_partition
+    from repro.graph.partition import shard_features
+    ds = small_dataset
+    p3 = d["parts"] - 1
+    part3 = ldg_partition(ds.graph, p3, passes=1)
+    t3, o3, l3 = shard_features(ds.features, part3, p3)
+    base = Trainer(graph=ds.graph, labels=ds.labels, part=part3, owner=o3,
+                   local_idx=l3, table=t3, cfg=_cfg(d),
+                   optimizer=adam(5e-3), merging=False,
+                   train_vertices=ds.train_vertices(),
+                   resilience=_policy())
+    bstats = base.fit(epochs=4, iters_per_epoch=4, batch_per_model=8)
+    assert abs(stats[-1].loss - bstats[-1].loss) <= \
+        0.35 * max(abs(bstats[-1].loss), 1e-6)
+
+
+def test_transient_flap_absorbed_with_zero_trace(partitioned):
+    """A flapping peer (transient peer_death) is absorbed by the retry
+    guard: bit-parity holds, no membership change, generation stays 0."""
+    d = partitioned
+    clean_tr = _trainer(d, _cfg(d), resilience=_policy())
+    clean_stats = clean_tr.fit(epochs=2, iters_per_epoch=4,
+                               batch_per_model=8)
+    fp = FaultPlan([FaultSpec("peer_death", epoch=0, it=1, shard=3,
+                              transient=True, drops=1, once=False)])
+    tr = _trainer(d, _cfg(d), resilience=_policy())
+    with fp.active():
+        stats = tr.fit(epochs=2, iters_per_epoch=4, batch_per_model=8)
+    assert _losses(stats) == _losses(clean_stats)
+    _assert_params_equal(tr, clean_tr)
+    assert stats[0].comm_retries >= 1
+    assert tr.membership.generation == 0
+    assert tr.membership_recoveries == 0
+
+
+def test_probe_false_positive_clears_suspicion(partitioned):
+    """A peer-attributed timeout whose peer answers the probe is a flap:
+    suspicion cleared, no generation bump, ordinary comm accounting."""
+    d = partitioned
+    tr = _trainer(d, _cfg(d), resilience=_policy())
+    rung = tr._recover(CommTimeout("ghost", peer=2, epoch=0, it=0), 0)
+    assert rung is None
+    assert not tr.membership.is_suspect(2)
+    assert tr.membership.generation == 0
+    assert tr.membership_recoveries == 0
+    assert tr._site_failures.get("comm") == 1  # fell through to comm path
+
+
+def test_stale_plan_refused_at_dispatch_and_upload(partitioned):
+    d = partitioned
+    tr = _trainer(d, _cfg(d), resilience=_policy())
+    plan = tr.build_plan(0, 0, 8)
+    assert plan.generation == 0
+    tr.membership.confirm_dead(3, epoch=0)     # world moved on
+    with pytest.raises(StaleGeneration):
+        tr._dispatch([plan], 0, 0)
+    from repro.train.pipeline import PlanUploader
+    up = PlanUploader(view=tr.membership)
+    with pytest.raises(StaleGeneration):
+        up.commit(plan)
+    assert up.uploads == 0                     # refused before staging
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint GC (satellite: keep-last-K, crash-safe ordering)
+# ---------------------------------------------------------------------------
+
+def _tree(v=0.0):
+    return {"w": np.full((4, 4), v, np.float32)}
+
+
+def test_gc_keeps_last_k_and_pins_latest(tmp_path):
+    from repro.checkpoint import save_checkpoint
+    from repro.checkpoint.store import gc_checkpoints, latest_step, \
+        valid_steps
+    for s in range(1, 6):
+        save_checkpoint(tmp_path, s, _tree(s), keep=0)   # keep=0: no GC
+    assert valid_steps(tmp_path) == [1, 2, 3, 4, 5]
+    deleted = gc_checkpoints(tmp_path, keep=2)
+    assert deleted == [1, 2, 3]
+    assert valid_steps(tmp_path) == [4, 5]
+    # latest pinned even when the keep window would drop it
+    (tmp_path / "latest").write_text("4")
+    save_checkpoint(tmp_path, 6, _tree(6), keep=0)
+    (tmp_path / "latest").write_text("4")
+    deleted = gc_checkpoints(tmp_path, keep=1)
+    assert 4 not in deleted
+    assert latest_step(tmp_path) == 4
+    assert set(valid_steps(tmp_path)) == {4, 6}
+
+
+def test_gc_sweeps_npz_orphans(tmp_path):
+    from repro.checkpoint import save_checkpoint
+    from repro.checkpoint.store import gc_checkpoints, valid_steps
+    for s in (1, 2, 3):
+        save_checkpoint(tmp_path, s, _tree(s), keep=0)
+    # simulate a crash that deleted the manifest but not the npz
+    (tmp_path / "step-00000001.json").unlink()
+    assert valid_steps(tmp_path) == [2, 3]     # orphan is invisible
+    deleted = gc_checkpoints(tmp_path, keep=2)
+    assert deleted == [1]                      # ...and swept next pass
+    assert not (tmp_path / "step-00000001.npz").exists()
+
+
+def test_save_checkpoint_prunes_via_gc(tmp_path):
+    from repro.checkpoint import save_checkpoint
+    from repro.checkpoint.store import valid_steps
+    for s in range(1, 7):
+        save_checkpoint(tmp_path, s, _tree(s), keep=3)
+    assert valid_steps(tmp_path) == [4, 5, 6]
+    assert not list(tmp_path.glob("*.tmp"))
+
+
+def _run_py(code: str, expect_signal=None) -> dict:
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True,
+        env={"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin",
+             "HOME": "/root", "JAX_PLATFORMS": "cpu"},
+        timeout=600)
+    if expect_signal is not None:
+        assert out.returncode == -expect_signal, out.stderr[-2000:]
+        return {}
+    assert out.returncode == 0, out.stderr[-3000:]
+    for line in out.stdout.splitlines():
+        if line.startswith("RESULT:"):
+            return json.loads(line[len("RESULT:"):])
+    raise AssertionError(f"no RESULT line in:\n{out.stdout}\n{out.stderr}")
+
+
+def test_sigkill_during_gc_leaves_recoverable_state(tmp_path):
+    """SIGKILL between a checkpoint's manifest and npz deletions: the
+    newest-durable checkpoint still loads, and the next sweep removes the
+    stranded npz orphan."""
+    ck = str(tmp_path / "ck")
+    _run_py(f"""
+    import os, signal
+    import numpy as np
+    from repro.checkpoint import save_checkpoint
+    from repro.checkpoint.store import gc_checkpoints
+    from repro.checkpoint import store as ckstore
+    d = {ck!r}
+    for s in range(1, 5):
+        save_checkpoint(d, s, {{"w": np.full((4, 4), float(s),
+                                            np.float32)}}, keep=0)
+    ckstore._GC_FAULT_HOOK = \\
+        lambda step: os.kill(os.getpid(), signal.SIGKILL)
+    gc_checkpoints(d, keep=2)      # killed mid-delete of step 1
+    """, expect_signal=9)
+    res = _run_py(f"""
+    import json
+    import numpy as np
+    from repro.checkpoint import load_checkpoint
+    from repro.checkpoint.store import gc_checkpoints, valid_steps
+    d = {ck!r}
+    tree, step, _ = load_checkpoint(d, {{"w": np.zeros((4, 4),
+                                                       np.float32)}})
+    deleted = gc_checkpoints(d, keep=2)
+    print("RESULT:" + json.dumps({{
+        "step": step, "w": float(tree["w"][0, 0]),
+        "valid": valid_steps(d), "deleted": deleted}}))
+    """)
+    assert res["step"] == 4 and res["w"] == 4.0
+    assert res["valid"] == [3, 4]
+    assert 1 in res["deleted"] or 2 in res["deleted"]   # orphan swept
+
+
+# ---------------------------------------------------------------------------
+# Serving drain deadline (satellite: ServeShutdown)
+# ---------------------------------------------------------------------------
+
+def test_serve_stop_fails_undrained_tickets():
+    from repro.serve import BatchingLoop, ServeShutdown
+    release = threading.Event()
+
+    def wedge(tickets):
+        release.wait(5.0)
+        return [t.payload for t in tickets]
+
+    loop = BatchingLoop(wedge, max_batch=1, name="drain-test",
+                        drain_deadline_s=0.05)
+    assert loop.drain_deadline_s == 0.05
+    loop.start()
+    tickets = [loop.submit(i) for i in range(4)]
+    time.sleep(0.05)               # let the loop wedge on the first batch
+    t0 = time.perf_counter()
+    loop.stop()                    # deadline bounded, not 30s
+    assert time.perf_counter() - t0 < 5.0
+    release.set()
+    failed = 0
+    for t in tickets:
+        try:
+            t.wait(timeout=5.0)
+        except ServeShutdown as e:
+            failed += 1
+            assert "undrained" in str(e)
+    assert failed >= 1             # queued tickets answered, not pending
+    assert loop.errors >= failed
+    assert all(t.done() for t in tickets[:1] + tickets[-1:]) or failed == 4
+
+
+def test_serve_stop_drains_when_queue_clears():
+    from repro.serve import BatchingLoop
+    loop = BatchingLoop(lambda ts: [t.payload * 2 for t in ts],
+                        max_batch=8, drain_deadline_s=2.0,
+                        name="drain-ok")
+    loop.start()
+    tickets = [loop.submit(i) for i in range(6)]
+    loop.stop()
+    assert [t.wait(timeout=1.0) for t in tickets] == [0, 2, 4, 6, 8, 10]
+    assert loop.errors == 0
